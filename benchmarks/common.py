@@ -1,0 +1,90 @@
+"""Shared benchmark scaffolding.
+
+The paper's experiments run 14-16B MoEs on GPU clusters; this container
+is one CPU core, so benchmarks run the SAME pipeline at reduced scale
+(tiny configs, small N) — the *claims* being validated are relative
+(DeepFusion vs baselines on identical data), see EXPERIMENTS.md.
+Results are cached under experiments/bench/ so table1/table2/fig9 share
+one underlying run per system size.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+from repro.federated.server import ServerConfig
+from repro.federated.simulation import SimulationConfig
+from repro.models.config import ModelConfig
+
+CACHE_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                         "bench")
+
+VOCAB = 256
+SEQ = 48
+
+
+def device_families():
+    """Two heterogeneous on-device LLM families (gpt2-ish / llama-ish)."""
+    small = dict(vocab_size=VOCAB, dtype="float32", remat=False,
+                 attn_chunk_q=32, attn_chunk_k=32, loss_chunk=32)
+    a = ModelConfig(name="gpt2-tiny", n_layers=2, d_model=64, n_heads=4,
+                    n_kv_heads=4, head_dim=16, d_ff=128,
+                    norm_type="layernorm", act="gelu", mlp_gated=False,
+                    pos_embedding="sinusoidal", **small).validate()
+    b = ModelConfig(name="llama-tiny", n_layers=3, d_model=96, n_heads=4,
+                    n_kv_heads=2, head_dim=24, d_ff=192, **small).validate()
+    return [a, b]
+
+
+def global_moe_cfg():
+    small = dict(vocab_size=VOCAB, dtype="float32", remat=False,
+                 attn_chunk_q=32, attn_chunk_k=32, loss_chunk=32)
+    return ModelConfig(name="qwen-moe-tiny", arch_type="moe", n_layers=2,
+                       d_model=64, n_heads=4, n_kv_heads=4, head_dim=16,
+                       d_ff=128, n_experts=4, top_k=2, moe_d_ff=128,
+                       n_shared_experts=1, **small).validate()
+
+
+def sim_cfg(n_devices: int, seed: int = 0) -> SimulationConfig:
+    return SimulationConfig(n_devices=n_devices, n_domains=4, vocab=VOCAB,
+                            seq_len=SEQ, device_steps=30, device_batch=8,
+                            seed=seed)
+
+
+def server_cfg(seed: int = 0) -> ServerConfig:
+    return ServerConfig(moe_cfg=global_moe_cfg(), distill_steps=40,
+                        distill_batch=8, tune_steps=40, tune_batch=8,
+                        seq_len=SEQ, n_stages=2, p_q=32, vaa_dim=64,
+                        seed=seed)
+
+
+def cache_path(name: str) -> str:
+    os.makedirs(CACHE_DIR, exist_ok=True)
+    return os.path.join(CACHE_DIR, name + ".json")
+
+
+def cached(name: str):
+    p = cache_path(name)
+    if os.path.exists(p):
+        with open(p) as f:
+            return json.load(f)
+    return None
+
+
+def store(name: str, obj) -> None:
+    with open(cache_path(name), "w") as f:
+        json.dump(obj, f, indent=1)
+
+
+def timed(fn, *args, repeats: int = 3, **kw):
+    """us per call after a warmup call (jit-compiled paths)."""
+    out = fn(*args, **kw)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats * 1e6, out

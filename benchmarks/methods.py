@@ -1,0 +1,82 @@
+"""Runs every method once per system size and caches metrics.
+
+Shared by table1 (perplexity), table2 (accuracy) and fig9 (centralized
+comparison) — the paper evaluates the same trained models three ways.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import (cached, device_families, global_moe_cfg,
+                               server_cfg, sim_cfg, store)
+from repro.core.baselines import (run_centralized, run_fedjets, run_fedkmt,
+                                  run_ofa_kd)
+from repro.data.federated import FederatedCorpus
+from repro.federated.simulation import build_fleet, run_deepfusion
+from repro.federated.device import train_device
+
+
+def _uploads_for(sim, corpus, device_cfgs, log):
+    fleet = build_fleet(sim, corpus, device_cfgs)
+    ups = []
+    for spec in fleet:
+        up = train_device(spec, corpus, steps=sim.device_steps,
+                          batch=sim.device_batch, seq_len=sim.seq_len,
+                          seed=sim.seed)
+        ups.append(up)
+        log(f"  device {spec.device_id} arch{spec.arch_id} "
+            f"dom{spec.domain_id} {up['losses'][-1]:.3f}")
+    return ups
+
+
+def run_all_methods(n_devices: int, *, log=print, seed: int = 0):
+    """Returns {method: {"log_ppl", "accuracy", "comm_bytes", ...}}."""
+    tag = f"methods_N{n_devices}_s{seed}"
+    hit = cached(tag)
+    if hit is not None:
+        return hit
+    sim = sim_cfg(n_devices, seed)
+    scfg = server_cfg(seed)
+    dev_cfgs = device_families()
+    corpus = FederatedCorpus.build(seed=sim.seed, n_devices=sim.n_devices,
+                                   n_domains=sim.n_domains, vocab=sim.vocab,
+                                   alpha=sim.alpha_noniid)
+    log(f"== N={n_devices}: local device training (shared across methods)")
+    uploads = _uploads_for(sim, corpus, dev_cfgs, log)
+
+    out = {}
+
+    def keep(name, report):
+        m = report["metrics"]
+        out[name] = {"log_ppl": m["log_ppl"], "ppl": m["ppl"],
+                     "accuracy": m["accuracy"],
+                     "comm_bytes": int(report.get("comm_bytes", 0))}
+        log(f"== {name}: log-ppl {m['log_ppl']:.4f} acc {m['accuracy']:.3f}")
+
+    log("== DeepFusion")
+    _, rep = run_deepfusion(sim, scfg, dev_cfgs, uploads=uploads,
+                            corpus=corpus, log=log)
+    keep("deepfusion", rep)
+
+    log("== FedKMT (logits-only KD ablation)")
+    _, rep = run_fedkmt(sim, scfg, dev_cfgs, uploads=uploads, corpus=corpus,
+                        log=log)
+    keep("fedkmt", rep)
+
+    log("== OFA-KD (stage-exit logits alignment)")
+    _, rep = run_ofa_kd(sim, scfg, dev_cfgs, uploads=uploads, corpus=corpus,
+                        log=log)
+    keep("ofa_kd", rep)
+
+    log("== FedJETS (pruned per-device MoE, multi-round)")
+    _, rep = run_fedjets(sim, global_moe_cfg(), rounds=3, local_steps=10,
+                         batch=8, corpus=corpus, log=log)
+    keep("fedjets", rep)
+
+    log("== Centralized upper bound")
+    _, rep = run_centralized(sim, global_moe_cfg(), steps=120, batch=8,
+                             corpus=corpus, log=log)
+    keep("centralized", rep)
+
+    store(tag, out)
+    return out

@@ -1,0 +1,255 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.  Heavyweight experiment
+results are cached under experiments/bench/ (delete to re-run).
+
+  PYTHONPATH=src python -m benchmarks.run            # everything
+  PYTHONPATH=src python -m benchmarks.run --only fig8_comm,roofline
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+def _quiet(*a, **k):
+    pass
+
+
+# ---------------------------------------------------------------------------
+# Tables I / II + Fig. 9 — method comparison across system scales
+# ---------------------------------------------------------------------------
+
+def table1_perplexity(sizes=(8, 16)):
+    """Paper Table I: token perplexity (log) per method per N."""
+    from benchmarks.methods import run_all_methods
+    for n in sizes:
+        t0 = time.time()
+        res = run_all_methods(n, log=_quiet)
+        us = (time.time() - t0) * 1e6
+        for method, m in res.items():
+            emit(f"table1/logppl/N{n}/{method}", us / max(len(res), 1),
+                 round(m["log_ppl"], 4))
+
+
+def table2_accuracy(sizes=(8, 16)):
+    """Paper Table II: token accuracy (%) per method per N."""
+    from benchmarks.methods import run_all_methods
+    for n in sizes:
+        t0 = time.time()
+        res = run_all_methods(n, log=_quiet)  # cached after table1
+        us = (time.time() - t0) * 1e6
+        for method, m in res.items():
+            emit(f"table2/acc%/N{n}/{method}", us / max(len(res), 1),
+                 round(100 * m["accuracy"], 2))
+
+
+def fig9_centralized(sizes=(8, 16)):
+    """Paper Fig. 9: DeepFusion vs centralized upper bound (gap)."""
+    from benchmarks.methods import run_all_methods
+    for n in sizes:
+        res = run_all_methods(n, log=_quiet)
+        gap = res["deepfusion"]["log_ppl"] - res["centralized"]["log_ppl"]
+        emit(f"fig9/logppl_gap_vs_centralized/N{n}", 0.0, round(gap, 4))
+
+
+def ablation_vaa(sizes=(8,)):
+    """§V.C ablation: VAA (deepfusion) vs logits-only (fedkmt) vs OFA."""
+    from benchmarks.methods import run_all_methods
+    for n in sizes:
+        res = run_all_methods(n, log=_quiet)
+        base = res["deepfusion"]["log_ppl"]
+        emit(f"ablation/vaa_vs_fedkmt_logppl_delta/N{n}", 0.0,
+             round(res["fedkmt"]["log_ppl"] - base, 4))
+        emit(f"ablation/vaa_vs_ofakd_logppl_delta/N{n}", 0.0,
+             round(res["ofa_kd"]["log_ppl"] - base, 4))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7 — on-device memory footprint (analytic, full-size configs)
+# ---------------------------------------------------------------------------
+
+def fig7_memory():
+    """Peak device-training memory: DeepFusion device LLMs vs FedJETS
+    pruned-MoE.  bf16 weights+grads + f32 adam (m,v) + activation est."""
+    import jax
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.utils.pytree import tree_size
+
+    def train_bytes(cfg, batch=1, seq=512):
+        n = tree_size(jax.eval_shape(
+            lambda: M.init_params(jax.random.PRNGKey(0), cfg)))
+        weights = 2 * n            # bf16
+        grads = 2 * n
+        adam = 8 * n               # f32 m+v
+        act = batch * seq * cfg.d_model * max(cfg.n_layers, 1) * 2
+        return weights + grads + adam + act
+
+    device_models = ["gpt2", "gpt2-medium", "tinyllama-1.1b", "olmo-1.2b",
+                     "bloom-1.1b"]
+    for name in device_models:
+        cfg = get_config(name)
+        emit(f"fig7/device_mem_GiB/{name}", 0.0,
+             round(train_bytes(cfg) / 2**30, 2))
+    # FedJETS local model: qwen-moe backbone + 2/60 experts
+    moe = get_config("qwen2-moe-a2.7b")
+    local = moe.replace(n_experts=2, top_k=2)
+    emit("fig7/device_mem_GiB/fedjets-local-moe", 0.0,
+         round(train_bytes(local) / 2**30, 2))
+    dev_avg = sum(train_bytes(get_config(n)) for n in device_models) / 5
+    emit("fig7/fedjets_vs_avg_device_ratio", 0.0,
+         round(train_bytes(local) / dev_avg, 2))
+
+
+# ---------------------------------------------------------------------------
+# Fig. 8 — FL communication costs (analytic, full-size configs)
+# ---------------------------------------------------------------------------
+
+def fig8_comm(sizes=(16, 32, 64, 128)):
+    """One-shot DeepFusion uploads (Eq. 5) vs FedJETS multi-round."""
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.utils.pytree import tree_size
+
+    device_models = ["gpt2", "gpt2-medium", "tinyllama-1.1b", "olmo-1.2b",
+                     "bloom-1.1b"]
+    sizes_b = {}
+    for name in device_models:
+        cfg = get_config(name)
+        n = tree_size(jax.eval_shape(
+            lambda c=cfg: M.init_params(jax.random.PRNGKey(0), c)))
+        sizes_b[name] = 2 * n  # bf16 upload
+    moe = get_config("qwen2-moe-a2.7b")
+    local = moe.replace(n_experts=2, top_k=2)
+    n_local = tree_size(jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), local)))
+    fedjets_round = 2 * 2 * n_local  # bf16, down+up per device per round
+    rng = np.random.default_rng(0)
+    for N in sizes:
+        picks = rng.choice(device_models, size=N)
+        deepfusion = int(sum(sizes_b[p] + 128 for p in picks))  # Eq. 5
+        emit(f"fig8/comm_GiB/N{N}/deepfusion_oneshot", 0.0,
+             round(deepfusion / 2**30, 2))
+        for rounds in (1, 10):
+            fedjets = int(N * rounds * fedjets_round)
+            emit(f"fig8/comm_GiB/N{N}/fedjets_{rounds}rounds", 0.0,
+                 round(fedjets / 2**30, 2))
+            emit(f"fig8/comm_reduction%/N{N}/vs_{rounds}rounds", 0.0,
+                 round(100 * (1 - deepfusion / fedjets), 1))
+
+
+# ---------------------------------------------------------------------------
+# kernel microbenchmarks (XLA paths on CPU; Pallas targets TPU)
+# ---------------------------------------------------------------------------
+
+def kernel_micro():
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import timed
+    from repro.models.layers import chunked_attention
+    from repro.models.ssm import ssd_chunked
+    from repro.kernels.kd_loss.ref import ce_kl_ref
+
+    key = jax.random.PRNGKey(0)
+    B, S, H, D = 1, 512, 4, 64
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, H, D))
+    v = jax.random.normal(ks[2], (B, S, H, D))
+    pos = jnp.arange(S)[None]
+    fn = jax.jit(lambda q, k, v: chunked_attention(
+        q, k, v, pos, pos, causal=True, q_chunk=128, k_chunk=128))
+    us, _ = timed(fn, q, k, v)
+    flops = 4 * B * H * S * S * D
+    emit("kernel/chunked_attention_512", us,
+         f"{flops / (us * 1e-6) / 1e9:.1f}GFLOPs")
+
+    Bs2, S2, H2, P2, N2 = 1, 1024, 4, 32, 32
+    ks = jax.random.split(key, 5)
+    xh = jax.random.normal(ks[0], (Bs2, S2, H2, P2))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bs2, S2, H2)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H2,)) * 0.3)
+    Bh = jax.random.normal(ks[3], (Bs2, S2, H2, N2)) * 0.3
+    Ch = jax.random.normal(ks[4], (Bs2, S2, H2, N2)) * 0.3
+    fn = jax.jit(lambda *a: ssd_chunked(*a, chunk=128)[0])
+    us, _ = timed(fn, xh, dt, A, Bh, Ch)
+    emit("kernel/ssd_chunked_1024", us, f"{S2}tok")
+
+    T, Dm, V = 256, 64, 8192
+    ks = jax.random.split(key, 5)
+    hs = jax.random.normal(ks[0], (T, Dm))
+    ws = jax.random.normal(ks[1], (Dm, V)) * 0.3
+    ht = jax.random.normal(ks[2], (T, Dm))
+    wt = jax.random.normal(ks[3], (Dm, V)) * 0.3
+    lab = jax.random.randint(ks[4], (T,), 0, V)
+    fn = jax.jit(lambda *a: ce_kl_ref(*a, tau=2.0)[1])
+    us, _ = timed(fn, hs, ws, ht, wt, lab)
+    emit("kernel/kd_loss_T256_V8k", us, "ce+kl")
+
+
+# ---------------------------------------------------------------------------
+# roofline table (reads dry-run artifacts)
+# ---------------------------------------------------------------------------
+
+def roofline():
+    import glob
+    import json
+    import os
+    here = os.path.dirname(__file__)
+    pat = os.path.join(here, "..", "experiments", "dryrun", "*_16x16.json")
+    files = sorted(glob.glob(pat))
+    if not files:
+        emit("roofline/no_dryrun_artifacts_found", 0.0, 0)
+        return
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        name = f"roofline/{rec['arch']}/{rec['shape']}"
+        if rec.get("status") == "SKIP":
+            emit(name, 0.0, "SKIP:" + rec.get("reason", "")[:40])
+            continue
+        if rec.get("status") != "OK":
+            emit(name, 0.0, "FAIL")
+            continue
+        t = rec["roofline"]
+        emit(name, t["t_compute_s"] * 1e6,
+             f"dom={t['dominant']};tc={t['t_compute_s']:.2e}s;"
+             f"tm={t['t_memory_s']:.2e}s;tx={t['t_collective_s']:.2e}s")
+
+
+ALL_BENCHES = {
+    "table1_perplexity": table1_perplexity,
+    "table2_accuracy": table2_accuracy,
+    "fig7_memory": fig7_memory,
+    "fig8_comm": fig8_comm,
+    "fig9_centralized": fig9_centralized,
+    "ablation_vaa": ablation_vaa,
+    "kernel_micro": kernel_micro,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args = ap.parse_args()
+    names = [n.strip() for n in args.only.split(",") if n.strip()] or \
+        list(ALL_BENCHES)
+    print("name,us_per_call,derived")
+    for n in names:
+        ALL_BENCHES[n]()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,83 @@
+"""Builds the EXPERIMENTS.md §Roofline table from experiments/dryrun/*.json.
+
+Adds MODEL_FLOPS = 6·N·D (train) / 2·N_active·D (prefill/decode) and the
+MODEL_FLOPS / HLO_FLOPS usefulness ratio.
+"""
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+
+from repro.configs import ALL, SHAPES, get_config
+from repro.models import model as M
+from repro.utils.pytree import tree_size
+
+CHIPS = 256
+
+
+def active_params(name):
+    cfg = get_config(name)
+    shapes = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    total = tree_size(shapes)
+    if not cfg.is_moe:
+        return total, total
+    # routed expert tensors scale by top_k / n_experts when active
+    import jax.tree_util as jtu
+    from repro.utils.pytree import path_str
+    flat, _ = jtu.tree_flatten_with_path(shapes)
+    routed = sum(l.size for p, l in flat
+                 if "moe/wi_gate" in path_str(p) or "moe/wi_up" in path_str(p)
+                 or ("moe/wo" in path_str(p) and "shared" not in path_str(p)))
+    active = total - routed + routed * cfg.top_k / cfg.n_experts
+    return total, int(active)
+
+
+def model_flops(name, shape_name):
+    shp = SHAPES[shape_name]
+    total, active = active_params(name)
+    if shp.kind == "train":
+        return 6 * active * shp.global_batch * shp.seq_len
+    if shp.kind == "prefill":
+        return 2 * active * shp.global_batch * shp.seq_len
+    return 2 * active * shp.global_batch  # decode: one token per seq
+
+
+def main():
+    here = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "dryrun")
+    rows = []
+    for f in sorted(glob.glob(os.path.join(here, "*_16x16.json"))):
+        rec = json.load(open(f))
+        arch, shape = rec["arch"], rec["shape"]
+        if rec["status"] == "SKIP":
+            rows.append((arch, shape, "SKIP", rec["reason"]))
+            continue
+        t = rec["roofline"]
+        mf = model_flops(arch, shape)
+        hlo_total = t["flops_per_device"] * CHIPS
+        ratio = mf / hlo_total if hlo_total else 0.0
+        peak = (rec["memory"]["peak_bytes"] or 0) / 2**30
+        rows.append((arch, shape, "OK", dict(
+            tc=t["t_compute_s"], tm=t["t_memory_s"], tx=t["t_collective_s"],
+            dom=t["dominant"], ratio=ratio, peak=peak,
+            mf=mf, hlo=hlo_total)))
+
+    print("| arch | shape | t_compute | t_memory | t_collective | dominant |"
+          " model/HLO flops | peak GiB/dev |")
+    print("|---|---|---|---|---|---|---|---|")
+    for arch, shape, st, info in rows:
+        if st == "SKIP":
+            print(f"| {arch} | {shape} | — | — | — | SKIP | — | — "
+                  f"({info}) |")
+            continue
+        print(f"| {arch} | {shape} | {info['tc']:.2e}s | {info['tm']:.2e}s "
+              f"| {info['tx']:.2e}s | **{info['dom']}** "
+              f"| {info['ratio']:.2f} | {info['peak']:.1f} |")
+
+
+if __name__ == "__main__":
+    main()

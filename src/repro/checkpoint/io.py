@@ -1,0 +1,44 @@
+"""Checkpointing: path-flattened npz pytree save/restore (no orbax dep)."""
+from __future__ import annotations
+
+import os
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.utils.pytree import path_str
+
+_SEP = "|"
+
+
+def save_pytree(tree, path: str) -> None:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    arrays: Dict[str, np.ndarray] = {}
+    for p, leaf in flat:
+        key = path_str(p).replace("/", _SEP)
+        x = np.asarray(jax.device_get(leaf))
+        if x.dtype == jnp.bfloat16:
+            arrays[key + "#bf16"] = x.astype(np.float32)
+        else:
+            arrays[key] = x
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    np.savez(path, **arrays)
+
+
+def load_pytree(template, path: str):
+    """Restore into the structure (and dtypes) of ``template``."""
+    data = np.load(path if path.endswith(".npz") else path + ".npz")
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = path_str(p).replace("/", _SEP)
+        if key in data:
+            arr = data[key]
+        elif key + "#bf16" in data:
+            arr = data[key + "#bf16"]
+        else:
+            raise KeyError(f"checkpoint missing {key}")
+        leaves.append(jnp.asarray(arr, dtype=leaf.dtype).reshape(leaf.shape))
+    return jax.tree_util.tree_unflatten(treedef, leaves)

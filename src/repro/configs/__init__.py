@@ -1,0 +1,6 @@
+from repro.configs.registry import (ALL, ASSIGNED, EXTRA, SHAPES,
+                                    InputShape, get_config, list_archs,
+                                    supported)
+
+__all__ = ["ALL", "ASSIGNED", "EXTRA", "SHAPES", "InputShape",
+           "get_config", "list_archs", "supported"]

@@ -1,0 +1,21 @@
+"""Mamba2-1.3B — attention-free SSD state-space model. [arXiv:2405.21060]
+
+48 SSD blocks, d_model=2048 (d_inner 4096, 64 heads x P=64, N=128).
+O(1)-state decode makes long_500k trivial (DESIGN.md §6).  The paper's
+FFN-expert distillation does not apply (no FFN experts) — DESIGN.md §4.
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="mamba2-1.3b",
+    arch_type="ssm",
+    citation="arXiv:2405.21060",
+    n_layers=48,
+    d_model=2048,
+    n_heads=0, n_kv_heads=0,
+    attn_type="none",
+    d_ff=0,
+    vocab_size=50280,
+    ssm_state=128, ssm_expand=2, ssm_head_dim=64, ssm_conv=4, ssm_chunk=256,
+    tie_embeddings=True,
+).validate()

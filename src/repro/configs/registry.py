@@ -1,0 +1,103 @@
+"""Architecture registry: ``--arch <id>`` resolution + shape policies."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Tuple
+
+from repro.models.config import ModelConfig, reduced
+
+from repro.configs.zamba2_7b import CONFIG as ZAMBA2_7B
+from repro.configs.gemma2_27b import CONFIG as GEMMA2_27B
+from repro.configs.gemma2_9b import CONFIG as GEMMA2_9B
+from repro.configs.whisper_small import CONFIG as WHISPER_SMALL
+from repro.configs.deepseek_v3_671b import CONFIG as DEEPSEEK_V3_671B
+from repro.configs.tinyllama_1_1b import CONFIG as TINYLLAMA_1_1B
+from repro.configs.qwen2_moe_a2_7b import CONFIG as QWEN2_MOE_A2_7B
+from repro.configs.paligemma_3b import CONFIG as PALIGEMMA_3B
+from repro.configs.mamba2_1_3b import CONFIG as MAMBA2_1_3B
+from repro.configs.starcoder2_3b import CONFIG as STARCODER2_3B
+from repro.configs.deepseek_moe_16b import CONFIG as DEEPSEEK_MOE_16B
+from repro.configs.device_models import (GPT2, GPT2_MEDIUM, OLMO_1_2B,
+                                         BLOOM_1_1B)
+
+# The 10 assigned architectures (the dry-run / roofline matrix).
+ASSIGNED: Dict[str, ModelConfig] = {
+    "zamba2-7b": ZAMBA2_7B,
+    "gemma2-27b": GEMMA2_27B,
+    "gemma2-9b": GEMMA2_9B,
+    "whisper-small": WHISPER_SMALL,
+    "deepseek-v3-671b": DEEPSEEK_V3_671B,
+    "tinyllama-1.1b": TINYLLAMA_1_1B,
+    "qwen2-moe-a2.7b": QWEN2_MOE_A2_7B,
+    "paligemma-3b": PALIGEMMA_3B,
+    "mamba2-1.3b": MAMBA2_1_3B,
+    "starcoder2-3b": STARCODER2_3B,
+}
+
+# Paper-specific + device models.
+EXTRA: Dict[str, ModelConfig] = {
+    "deepseek-moe-16b": DEEPSEEK_MOE_16B,
+    "gpt2": GPT2,
+    "gpt2-medium": GPT2_MEDIUM,
+    "olmo-1.2b": OLMO_1_2B,
+    "bloom-1.1b": BLOOM_1_1B,
+}
+
+ALL: Dict[str, ModelConfig] = {**ASSIGNED, **EXTRA}
+
+# ---------------------------------------------------------------------------
+# input shapes (assigned)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # "train" | "prefill" | "decode"
+
+SHAPES: Dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524288, 1, "decode"),
+}
+
+# long_500k policy (DESIGN.md §6): run for sub-quadratic-decode archs,
+# skip for pure full-attention dense archs / 448-ctx whisper.
+LONG_DECODE_OK = {
+    "mamba2-1.3b": "O(1) SSM state",
+    "zamba2-7b": "SSM state + shared-attn KV (hybrid)",
+    "gemma2-9b": "sliding-window local layers",
+    "gemma2-27b": "sliding-window local layers",
+    "deepseek-v3-671b": "MLA latent cache (576 f/token/layer)",
+}
+LONG_DECODE_SKIP = {
+    "tinyllama-1.1b": "pure full attention, no windowed variant",
+    "starcoder2-3b": "pure full attention, no windowed variant",
+    "paligemma-3b": "pure full attention, no windowed variant",
+    "qwen2-moe-a2.7b": "pure full attention, no windowed variant",
+    "whisper-small": "decoder designed for 448-token context",
+}
+
+
+def supported(arch: str, shape: str) -> Tuple[bool, str]:
+    if shape == "long_500k":
+        if arch in LONG_DECODE_OK:
+            return True, LONG_DECODE_OK[arch]
+        return False, LONG_DECODE_SKIP.get(arch, "unsupported")
+    return True, ""
+
+
+def get_config(name: str, *, variant: str = "full") -> ModelConfig:
+    """--arch resolution.  variant: full | reduced."""
+    if name not in ALL:
+        raise KeyError(f"unknown arch '{name}'; known: {sorted(ALL)}")
+    cfg = ALL[name]
+    if variant == "reduced":
+        return reduced(cfg)
+    return cfg
+
+
+def list_archs() -> List[str]:
+    return sorted(ASSIGNED)

@@ -1,0 +1,22 @@
+"""Zamba2-7B — hybrid Mamba2 + shared-attention blocks. [arXiv:2411.15242]
+
+81 Mamba-2 blocks, d_model=3584; ONE shared attention(+MLP) block whose
+parameters are reused every 6 blocks (Zamba's parameter-sharing trick —
+here without the per-use LoRA deltas of the paper, noted in DESIGN.md).
+"""
+from repro.models.config import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    arch_type="hybrid",
+    citation="arXiv:2411.15242",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32, n_kv_heads=32, head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_conv=4, ssm_chunk=256,
+    shared_attn_every=6,
+    rope_theta=10000.0,
+    tie_embeddings=True,
+).validate()

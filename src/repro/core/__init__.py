@@ -1,0 +1,11 @@
+"""DeepFusion core: the paper's contribution as composable JAX modules.
+
+Pipeline (paper Fig. 3):
+  Phase I   `clustering` + `proxy`   — local knowledge clustering
+  Phase II  `vaa` + `distill`        — cross-architecture KD (VAA module)
+  Phase III `merge` + `tuning`       — global MoE merge + frozen-expert tune
+Baselines in `baselines/` (FedAvg, FedJETS, FedKMT, OFA-KD, centralized).
+"""
+from repro.core import clustering, distill, merge, proxy, tuning, vaa
+
+__all__ = ["clustering", "distill", "merge", "proxy", "tuning", "vaa"]

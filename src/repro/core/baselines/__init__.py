@@ -1,0 +1,8 @@
+from repro.core.baselines.centralized import run_centralized
+from repro.core.baselines.fedavg import run_fedavg
+from repro.core.baselines.fedjets import run_fedjets
+from repro.core.baselines.fedkmt import run_fedkmt
+from repro.core.baselines.ofa_kd import run_ofa_kd
+
+__all__ = ["run_centralized", "run_fedavg", "run_fedjets", "run_fedkmt",
+           "run_ofa_kd"]

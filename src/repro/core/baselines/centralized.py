@@ -1,0 +1,52 @@
+"""Centralized MoE training — the paper's upper bound ("DeepSpeed" role).
+
+All private device data is pooled at the server (violating the FL
+constraint — that is the point of the upper bound) and the global MoE is
+trained end-to-end with full-parameter updates.  Communication cost is
+the raw data upload.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict
+
+import jax
+import numpy as np
+
+from repro.data.federated import FederatedCorpus
+from repro.federated.simulation import SimulationConfig, evaluate_model
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def run_centralized(sim: SimulationConfig, moe_cfg: ModelConfig, *,
+                    steps: int = 120, batch: int = 8, lr: float = 1e-3,
+                    corpus: FederatedCorpus = None,
+                    log: Callable[[str], None] = print):
+    corpus = corpus or FederatedCorpus.build(
+        seed=sim.seed, n_devices=sim.n_devices, n_domains=sim.n_domains,
+        vocab=sim.vocab, alpha=sim.alpha_noniid)
+    params = M.init_params(jax.random.PRNGKey(sim.seed + 7), moe_cfg)
+    opt = adamw_init(params)
+    sched = cosine_schedule(lr, steps, warmup=max(steps // 20, 1))
+
+    @jax.jit
+    def step_fn(params, opt, b, lr_now):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: M.loss_fn(p, moe_cfg, b), has_aux=True)(params)
+        params, opt, _ = adamw_update(g, opt, params, lr=lr_now)
+        return params, opt, loss
+
+    hist = []
+    for s in range(steps):
+        # pooled data: sample across devices' domains uniformly
+        b = corpus.mixed_eval_batch(batch, sim.seq_len, seed_salt=77_000 + s)
+        params, opt, loss = step_fn(params, opt, b, sched(s))
+        hist.append(float(loss))
+    log(f"centralized: loss {hist[0]:.3f}->{hist[-1]:.3f}")
+    metrics = evaluate_model(params, moe_cfg, corpus, seq_len=sim.seq_len)
+    # comm: every device ships its raw data (tokens, int32)
+    tokens_per_device = sim.device_steps * sim.device_batch * (sim.seq_len + 1)
+    comm = int(sim.n_devices * tokens_per_device * 4)
+    return params, {"metrics": metrics, "comm_bytes": comm, "history": hist,
+                    "corpus": corpus}

@@ -1,0 +1,57 @@
+"""FedAvg [McMahan et al., AISTATS'17] — classic multi-round FL.
+
+Every device trains *the same* small dense model (architecture-homogeneous
+by construction); the server element-wise averages each round.  Included
+as the canonical FL reference: its per-round down+up traffic of the full
+model is what DeepFusion's one-shot design avoids (Fig. 8).
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.data.federated import FederatedCorpus
+from repro.federated.simulation import SimulationConfig, evaluate_model
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update
+from repro.utils.pytree import tree_average, tree_bytes
+
+
+def run_fedavg(sim: SimulationConfig, model_cfg: ModelConfig, *,
+               rounds: int = 5, local_steps: int = 8, batch: int = 8,
+               lr: float = 3e-3, corpus: FederatedCorpus = None,
+               log: Callable[[str], None] = print):
+    corpus = corpus or FederatedCorpus.build(
+        seed=sim.seed, n_devices=sim.n_devices, n_domains=sim.n_domains,
+        vocab=sim.vocab, alpha=sim.alpha_noniid)
+    global_params = M.init_params(jax.random.PRNGKey(sim.seed + 11), model_cfg)
+
+    @jax.jit
+    def local_step(params, opt, b, lr_now):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: M.loss_fn(p, model_cfg, b), has_aux=True)(params)
+        params, opt, _ = adamw_update(g, opt, params, lr=lr_now)
+        return params, opt, loss
+
+    model_bytes = tree_bytes(global_params)
+    comm = 0
+    for r in range(rounds):
+        locals_ = []
+        for n in range(sim.n_devices):
+            params = global_params
+            opt = adamw_init(params)
+            for s in range(local_steps):
+                b = corpus.device_batch(n, batch, sim.seq_len,
+                                        step=r * local_steps + s)
+                params, opt, loss = local_step(params, opt, b, lr)
+            locals_.append(params)
+            comm += 2 * model_bytes  # download + upload
+        global_params = tree_average(locals_)
+        log(f"fedavg round {r}: loss {float(loss):.3f}")
+    metrics = evaluate_model(global_params, model_cfg, corpus,
+                             seq_len=sim.seq_len)
+    return global_params, {"metrics": metrics, "comm_bytes": int(comm),
+                           "corpus": corpus}

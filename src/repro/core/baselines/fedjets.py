@@ -1,0 +1,150 @@
+"""FedJETS [Dun et al., 2023] — federated MoE with per-device pruned MoEs.
+
+Each device hosts a *compact MoE network pruned from the global MoE*: the
+full attention/embedding backbone plus a small subset of the experts
+(here ``experts_per_device``).  Multi-round: every round each device
+downloads its pruned model, trains locally, uploads; the server averages
+the backbone across all devices and each expert across its owners.
+
+This is the baseline whose device-memory and communication profile the
+paper attacks (Figs. 7, 8): the pruned model still carries the MoE
+backbone and is several times larger than a lightweight on-device LLM.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.federated import FederatedCorpus
+from repro.federated.simulation import SimulationConfig, evaluate_model
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update
+from repro.utils.pytree import tree_average, tree_bytes
+
+
+def _slice_experts(moe_params, expert_ids):
+    """Prune the global MoE down to the given expert slots."""
+    idx = jnp.asarray(expert_ids)
+
+    def prune(path_leaf):
+        return path_leaf
+
+    pruned = jax.tree.map(lambda x: x, moe_params)  # shallow copy
+    for sub in pruned["blocks"]:
+        mo = pruned["blocks"][sub].get("moe")
+        if mo is None:
+            continue
+        mo = dict(mo)
+        mo["router"] = mo["router"][:, :, idx] if mo["router"].ndim == 3 \
+            else mo["router"][:, idx]
+        for w in ("wi_gate", "wi_up", "wo"):
+            mo[w] = mo[w][:, idx]
+        pruned["blocks"][sub] = dict(pruned["blocks"][sub], moe=mo)
+    return pruned
+
+
+def _write_back(global_params, local_params_list, assignments, E):
+    """Average backbone across devices; write experts back to owners."""
+    # backbone average: everything except the expert tensors + router cols
+    def strip(p):
+        q = jax.tree.map(lambda x: x, p)
+        for sub in q["blocks"]:
+            if "moe" in q["blocks"][sub]:
+                b = dict(q["blocks"][sub])
+                del b["moe"]
+                q["blocks"][sub] = b
+        return q
+
+    avg_backbone = tree_average([strip(p) for p in local_params_list])
+    out = jax.tree.map(lambda x: x, global_params)
+    for k in avg_backbone:
+        if k != "blocks":
+            out[k] = avg_backbone[k]
+    for sub in out["blocks"]:
+        blk = dict(out["blocks"][sub])
+        for name in blk:
+            if name != "moe":
+                blk[name] = avg_backbone["blocks"][sub][name]
+        # experts: average over owning devices
+        if "moe" in blk:
+            mo = dict(blk["moe"])
+            for w in ("wi_gate", "wi_up", "wo"):
+                acc = np.asarray(mo[w]).copy()
+                cnt = np.zeros(E)
+                buf = np.zeros_like(acc)
+                for lp, ids in zip(local_params_list, assignments):
+                    lw = np.asarray(lp["blocks"][sub]["moe"][w])
+                    for j, e in enumerate(ids):
+                        buf[:, e] += lw[:, j]
+                        cnt[e] += 1
+                for e in range(E):
+                    if cnt[e]:
+                        acc[:, e] = buf[:, e] / cnt[e]
+                mo[w] = jnp.asarray(acc)
+            # router columns: average over owners
+            r = np.asarray(mo["router"]).copy()
+            rbuf = np.zeros_like(r)
+            rcnt = np.zeros(E)
+            for lp, ids in zip(local_params_list, assignments):
+                lr_ = np.asarray(lp["blocks"][sub]["moe"]["router"])
+                for j, e in enumerate(ids):
+                    rbuf[..., e] += lr_[..., j]
+                    rcnt[e] += 1
+            for e in range(E):
+                if rcnt[e]:
+                    r[..., e] = rbuf[..., e] / rcnt[e]
+            mo["router"] = jnp.asarray(r)
+            blk["moe"] = mo
+        out["blocks"][sub] = blk
+    return out
+
+
+def run_fedjets(sim: SimulationConfig, moe_cfg: ModelConfig, *,
+                rounds: int = 3, local_steps: int = 8, batch: int = 8,
+                lr: float = 2e-3, experts_per_device: int = 2,
+                corpus: FederatedCorpus = None,
+                log: Callable[[str], None] = print):
+    corpus = corpus or FederatedCorpus.build(
+        seed=sim.seed, n_devices=sim.n_devices, n_domains=sim.n_domains,
+        vocab=sim.vocab, alpha=sim.alpha_noniid)
+    E = moe_cfg.n_experts
+    ec = experts_per_device
+    local_cfg = moe_cfg.replace(n_experts=ec, top_k=min(moe_cfg.top_k, ec))
+    global_params = M.init_params(jax.random.PRNGKey(sim.seed + 13), moe_cfg)
+    rng = np.random.default_rng(sim.seed + 17)
+
+    @jax.jit
+    def local_step(params, opt, b, lr_now):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: M.loss_fn(p, local_cfg, b), has_aux=True)(params)
+        params, opt, _ = adamw_update(g, opt, params, lr=lr_now)
+        return params, opt, loss
+
+    comm = 0
+    local_bytes = None
+    for r in range(rounds):
+        locals_, assignments = [], []
+        for n in range(sim.n_devices):
+            ids = sorted(rng.choice(E, size=ec, replace=False).tolist())
+            lp = _slice_experts(global_params, ids)
+            if local_bytes is None:
+                local_bytes = tree_bytes(lp)
+            opt = adamw_init(lp)
+            for s in range(local_steps):
+                b = corpus.device_batch(n, batch, sim.seq_len,
+                                        step=r * local_steps + s)
+                lp, opt, loss = local_step(lp, opt, b, lr)
+            locals_.append(lp)
+            assignments.append(ids)
+            comm += 2 * local_bytes
+        global_params = _write_back(global_params, locals_, assignments, E)
+        log(f"fedjets round {r}: loss {float(loss):.3f}")
+    metrics = evaluate_model(global_params, moe_cfg, corpus,
+                             seq_len=sim.seq_len)
+    return global_params, {"metrics": metrics, "comm_bytes": int(comm),
+                           "local_model_bytes": int(local_bytes or 0),
+                           "corpus": corpus}

@@ -1,0 +1,29 @@
+"""FedKMT/FedMKT [Fan et al., COLING'25] — logits-only federated KD.
+
+Same one-shot uploads and clustering as DeepFusion, but knowledge is
+transferred through **final logits only** (KL), with no feature-level
+alignment.  Ablation target: quantifies what the VAA feature path adds
+(paper §V.C "Cross-architecture Knowledge Distillation").
+
+Implementation: the DeepFusion server pipeline with α = 0 (no L_FM) —
+identical budgets everywhere else, so differences isolate the mechanism.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Sequence
+
+from repro.data.federated import FederatedCorpus
+from repro.federated.server import DeepFusionServer, ServerConfig
+from repro.federated.simulation import (SimulationConfig, evaluate_model,
+                                        run_deepfusion)
+from repro.models.config import ModelConfig
+
+
+def run_fedkmt(sim: SimulationConfig, server_cfg: ServerConfig,
+               device_cfgs: Sequence[ModelConfig], *, uploads=None,
+               corpus: FederatedCorpus = None,
+               log: Callable[[str], None] = print):
+    cfg = dataclasses.replace(server_cfg, alpha=0.0)
+    return run_deepfusion(sim, cfg, device_cfgs, uploads=uploads,
+                          corpus=corpus, log=log)

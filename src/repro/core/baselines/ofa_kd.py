@@ -1,0 +1,117 @@
+"""OFA-KD [Hao et al., NeurIPS'23] — cross-architecture KD via logit space.
+
+Instead of aligning features in a learned common space (VAA), OFA-KD
+projects the student's *intermediate* stage features into the logits
+space with small exit heads and aligns each against the **teacher's
+final logits** (KL).  We keep everything else identical to the
+DeepFusion pipeline (clustering, proxies, merge, tune) so the
+feature-alignment mechanism is the only variable.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import distill as D
+from repro.core import merge
+from repro.data.federated import FederatedCorpus
+from repro.federated.server import DeepFusionServer, ServerConfig
+from repro.federated.simulation import SimulationConfig, evaluate_model
+from repro.models import layers
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+
+
+def init_ofa_heads(key, *, n_stages: int, d_student: int, vocab: int,
+                   rank: int = 64):
+    """Low-rank exit heads: stage feature -> logits."""
+    ks = jax.random.split(key, 2)
+    return {
+        "down": layers.dense_init(ks[0], (n_stages, d_student, rank), 1),
+        "up": layers.dense_init(ks[1], (n_stages, rank, vocab), 1),
+    }
+
+
+def ofa_loss(trainable, s_cfg: ModelConfig, t_params, t_cfg: ModelConfig,
+             batch, teacher_out, *, beta: float, temperature: float,
+             n_stages: int, gamma_stage: float = 0.5, mesh=None):
+    s_params, heads = trainable["student"], trainable["ofa"]
+    h_s, aux, _, stages = M.backbone(s_params, s_cfg, batch, mesh=mesh,
+                                     collect_stages=True)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    ce, kl, tok, cor = D.chunked_ce_kl(
+        s_params, s_cfg, h_s, t_params, t_cfg, teacher_out["h"], labels, mask,
+        temperature=temperature)
+    ce = ce / jnp.maximum(tok, 1.0)
+    kl = kl / jnp.maximum(tok, 1.0)
+    # stage exits vs teacher final logits
+    t_logits = M._head(t_params, t_cfg, teacher_out["h"])
+    logp_t = jax.lax.stop_gradient(
+        jax.nn.log_softmax(t_logits / temperature, axis=-1))
+    p_t = jnp.exp(logp_t)
+    s_stages = D.select_stages(stages, n_stages)
+    stage_kl = jnp.zeros((), jnp.float32)
+    for j, f in enumerate(s_stages):
+        z = (f.astype(jnp.float32) @ heads["down"][j]) @ heads["up"][j]
+        logp_s = jax.nn.log_softmax(z / temperature, axis=-1)
+        stage_kl += jnp.mean(jnp.sum(p_t * (logp_t - logp_s), -1)) * temperature ** 2
+    stage_kl = stage_kl / n_stages
+    total = ce + beta * kl + gamma_stage * stage_kl + aux
+    return total, {"ce": ce, "kl": kl, "stage_kl": stage_kl,
+                   "accuracy": cor / jnp.maximum(tok, 1.0)}
+
+
+class OFAServer(DeepFusionServer):
+    def distill_proxy(self, proxy_item, base_cfg, *, init_params=None,
+                      seed_offset: int = 0):
+        scfg = self.cfg
+        t_cfg = self.device_cfgs[proxy_item["arch"]]
+        t_params = proxy_item["params"]
+        s_params = init_params if init_params is not None else M.init_params(
+            jax.random.PRNGKey(scfg.seed + 404 + seed_offset), base_cfg)
+        heads = init_ofa_heads(jax.random.PRNGKey(scfg.seed + 505 + seed_offset),
+                               n_stages=scfg.n_stages,
+                               d_student=base_cfg.d_model,
+                               vocab=base_cfg.vocab_size)
+        trainable = {"student": s_params, "ofa": heads}
+        opt = adamw_init(trainable)
+        sched = cosine_schedule(scfg.distill_lr, scfg.distill_steps,
+                                warmup=max(scfg.distill_steps // 20, 1))
+
+        def raw_step(trainable, opt, t_params, batch, lr):
+            teacher_out = D.teacher_forward(t_params, t_cfg, batch,
+                                            n_stages=scfg.n_stages)
+            (loss, metrics), grads = jax.value_and_grad(ofa_loss, has_aux=True)(
+                trainable, base_cfg, t_params, t_cfg, batch, teacher_out,
+                beta=scfg.beta, temperature=scfg.temperature,
+                n_stages=scfg.n_stages)
+            trainable, opt, _ = adamw_update(grads, opt, trainable, lr=lr)
+            return trainable, opt, loss
+
+        step = jax.jit(raw_step)
+        hist = []
+        for s in range(scfg.distill_steps):
+            batch = self.corpus.mixed_eval_batch(scfg.distill_batch,
+                                                 scfg.seq_len, seed_salt=s)
+            trainable, opt, loss = step(trainable, opt, t_params, batch,
+                                        sched(s))
+            hist.append(float(loss))
+        self.log(f"OFA-KD: proxy c{proxy_item['cluster']} distilled "
+                 f"loss {hist[0]:.3f}->{hist[-1]:.3f}")
+        return trainable["student"], hist
+
+
+def run_ofa_kd(sim: SimulationConfig, server_cfg: ServerConfig,
+               device_cfgs: Sequence[ModelConfig], *, uploads, corpus,
+               log: Callable[[str], None] = print):
+    server = OFAServer(server_cfg, corpus, device_cfgs, log=log)
+    moe_params, report = server.run(uploads)
+    metrics = evaluate_model(moe_params, server_cfg.moe_cfg, corpus,
+                             seq_len=sim.seq_len)
+    report["metrics"] = metrics
+    return moe_params, report

@@ -1,0 +1,86 @@
+"""Global MoE model merge (paper §IV.D, Fig. 6).
+
+Merge rule:
+ * expert i of every MoE block copies the FFN of base model M_i (Eq. 12);
+ * embedding / self-attention / output (and norms) are the element-wise
+   average over the K base models (Eq. 13);
+ * the router (gate) keeps its fresh initialisation — it is trained in
+   Phase III.
+
+The MoE config's ``moe_d_ff`` must equal the base models' ``d_ff`` (the
+upcycling invariant, Fig. 1).  When there are fewer base models than
+experts, clusters are assigned to experts round-robin (each proxy seeds
+⌈E/K⌉ experts — noted in DESIGN.md); shared experts are seeded from the
+average FFN.
+"""
+from __future__ import annotations
+
+from typing import List, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models import model as M
+from repro.utils.pytree import tree_average
+
+
+def base_config_of(moe_cfg: ModelConfig, name: str = "") -> ModelConfig:
+    """The dense 'MoE base model' config this MoE upcycles from (Fig. 1)."""
+    return moe_cfg.replace(
+        name=name or (moe_cfg.name + "-base"),
+        arch_type="dense",
+        n_experts=0, n_shared_experts=0, top_k=0, moe_d_ff=0,
+        first_dense_layers=0, n_mtp=0,
+        d_ff=moe_cfg.moe_d_ff or moe_cfg.d_ff,
+    )
+
+
+_AVG_TOP = ("embed", "final_norm", "lm_head")
+_AVG_BLOCK = ("ln1", "ln2", "ln1_post", "ln2_post", "attn")
+
+
+def merge_into_moe(key, moe_cfg: ModelConfig,
+                   base_params_list: Sequence) -> dict:
+    """Builds global MoE params from K dense base models (Fig. 6)."""
+    E = moe_cfg.n_experts
+    K = len(base_params_list)
+    assert K >= 1
+    moe_params = M.init_params(key, moe_cfg)
+    dtype = jnp.dtype(moe_cfg.dtype)
+    avg = tree_average(list(base_params_list))
+
+    # ---- top-level shared layers: average (Eq. 13) ----------------------
+    for name in _AVG_TOP:
+        if name in moe_params and name in avg:
+            moe_params[name] = jax.tree.map(
+                lambda a, m: a.astype(m.dtype), avg[name], moe_params[name])
+
+    # ---- per-block: average attention/norms, copy expert FFNs (Eq. 12) --
+    blocks = moe_params["blocks"]
+    lps = moe_cfg.layers_per_scan
+    for i in range(lps):
+        sub = blocks[f"sub{i}"]
+        asub = avg["blocks"]["sub0"]
+        for name in _AVG_BLOCK:
+            if name in sub and name in asub:
+                sub[name] = jax.tree.map(
+                    lambda a, m: a.astype(m.dtype), asub[name], sub[name])
+        # experts: (nG, E, D, F) <- base_e (nG, D, F), round-robin over K
+        for wname in ("wi_gate", "wi_up", "wo"):
+            tgt = sub["moe"][wname]
+            for e in range(E):
+                src = base_params_list[e % K]["blocks"]["sub0"]["mlp"][wname]
+                tgt = tgt.at[:, e].set(src.astype(tgt.dtype))
+            sub["moe"][wname] = tgt
+        # shared experts: tile the average FFN
+        if moe_cfg.n_shared_experts and "shared" in sub["moe"]:
+            F = moe_cfg.moe_d_ff or moe_cfg.d_ff
+            n_sh = moe_cfg.n_shared_experts
+            am = avg["blocks"]["sub0"]["mlp"]
+            sh = sub["moe"]["shared"]
+            sh["wi_gate"] = jnp.tile(am["wi_gate"], (1, 1, n_sh)).astype(dtype)
+            sh["wi_up"] = jnp.tile(am["wi_up"], (1, 1, n_sh)).astype(dtype)
+            sh["wo"] = (jnp.tile(am["wo"], (1, n_sh, 1)) / n_sh).astype(dtype)
+    moe_params["blocks"] = blocks
+    return moe_params

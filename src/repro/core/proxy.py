@@ -1,0 +1,34 @@
+"""Local-knowledge proxy models (paper §IV.B, Fig. 4).
+
+Within each knowledge domain C_i the uploaded on-device LLMs are
+element-wise weight-averaged into a proxy model m̄_i that stands in for
+the whole cluster during distillation — this caps the number of teacher
+forward passes at K regardless of the device count N (the paper's
+scalability answer, Challenge 2).
+"""
+from __future__ import annotations
+
+from typing import Dict, List, Sequence
+
+from repro.utils.pytree import tree_average
+from repro.core.clustering import ClusterResult
+
+
+def build_proxies(device_params: Sequence, clusters: ClusterResult,
+                  device_arch: Sequence[int]) -> List[Dict]:
+    """Returns one proxy per non-empty cluster:
+    {"params", "members", "arch"}  (clusters guaranteed arch-consistent).
+    """
+    proxies = []
+    for j, members in enumerate(clusters.members):
+        if not members:
+            continue
+        archs = {int(device_arch[m]) for m in members}
+        assert len(archs) == 1, f"cluster {j} mixes architectures {archs}"
+        proxies.append({
+            "params": tree_average([device_params[m] for m in members]),
+            "members": members,
+            "arch": archs.pop(),
+            "cluster": j,
+        })
+    return proxies

@@ -1,0 +1,56 @@
+"""Phase III — global MoE model tuning (paper §IV.D).
+
+FFN experts (routed *and* shared — the overwhelming majority of params)
+are **frozen**; the embedding, self-attention, gate (router) and output
+layers are fine-tuned on server-side public data.  The freeze mask feeds
+``repro.optim.adamw``, whose frozen leaves carry scalar moments — the
+"reduced memory footprint and faster convergence" claim of the paper.
+"""
+from __future__ import annotations
+
+import re
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update
+from repro.utils.pytree import flatten_with_paths, path_str
+
+_FROZEN = re.compile(r"moe/(wi_gate|wi_up|wo)$|moe/shared/")
+
+
+def expert_freeze_mask(params) -> Dict:
+    """True = trainable.  Freezes routed + shared expert FFN weights."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params)
+    mask = [not _FROZEN.search(path_str(p)) for p, _ in flat]
+    return jax.tree_util.tree_unflatten(treedef, mask)
+
+
+def trainable_fraction(params) -> float:
+    mask = expert_freeze_mask(params)
+    tot = sum(x.size for x in jax.tree.leaves(params))
+    train = sum(x.size for x, m in
+                zip(jax.tree.leaves(params), jax.tree.leaves(mask)) if m)
+    return train / max(tot, 1)
+
+
+def make_tune_step(cfg: ModelConfig, freeze_mask, *, weight_decay=0.01,
+                   mesh=None):
+    def step(params, opt_state, batch, lr):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch, mesh=mesh), has_aux=True)(params)
+        params, opt_state, stats = adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay,
+            freeze_mask=freeze_mask)
+        metrics.update(stats)
+        return params, opt_state, loss, metrics
+
+    return step
+
+
+def init_tuning(params, *, state_dtype=None):
+    mask = expert_freeze_mask(params)
+    return mask, adamw_init(params, freeze_mask=mask, state_dtype=state_dtype)

@@ -1,0 +1,5 @@
+from repro.data.synthetic import DomainSpec, make_domains, sample_tokens, domain_embedding
+from repro.data.federated import FederatedCorpus, dirichlet_partition
+
+__all__ = ["DomainSpec", "make_domains", "sample_tokens", "domain_embedding",
+           "FederatedCorpus", "dirichlet_partition"]

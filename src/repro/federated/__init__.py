@@ -1,0 +1,7 @@
+from repro.federated.device import DeviceSpec, train_device, device_upload_bytes
+from repro.federated.server import DeepFusionServer, ServerConfig
+from repro.federated.simulation import SimulationConfig, run_deepfusion
+
+__all__ = ["DeviceSpec", "train_device", "device_upload_bytes",
+           "DeepFusionServer", "ServerConfig",
+           "SimulationConfig", "run_deepfusion"]

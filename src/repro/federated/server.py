@@ -1,0 +1,155 @@
+"""DeepFusion central server (paper Fig. 3): the three-phase pipeline.
+
+Phase I   — local knowledge clustering: cluster uploaded on-device LLMs
+            by data embeddings into K domains, weight-average per cluster
+            into proxy models m̄_i (§IV.B).
+Phase II  — cross-architecture KD: distill each proxy into a dense "MoE
+            base model" M_i with the VAA module (§IV.C, Eq. 7-11) on
+            public server data.
+Phase III — merge the K base models into the global MoE (Fig. 6) and
+            tune with frozen experts (§IV.D).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import clustering, distill, merge, proxy, tuning
+from repro.core import vaa as vaa_mod
+from repro.data.federated import FederatedCorpus
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.utils.pytree import tree_size
+
+
+@dataclasses.dataclass
+class ServerConfig:
+    moe_cfg: ModelConfig
+    distill_steps: int = 60
+    distill_batch: int = 8
+    distill_lr: float = 1e-3
+    tune_steps: int = 60
+    tune_batch: int = 8
+    tune_lr: float = 5e-4
+    seq_len: int = 64
+    alpha: float = 1.0            # L_FM weight (Eq. 11)
+    beta: float = 1.0             # L_KL weight (Eq. 11)
+    temperature: float = 2.0
+    n_stages: int = 4             # J representation stages
+    vaa_dim: int = 128
+    vaa_heads: int = 4
+    p_q: int = 64                 # total VAA queries
+    seed: int = 0
+
+
+class DeepFusionServer:
+    def __init__(self, cfg: ServerConfig, corpus: FederatedCorpus,
+                 device_cfgs: Sequence[ModelConfig], *, mesh=None,
+                 log: Callable[[str], None] = lambda s: None):
+        self.cfg = cfg
+        self.corpus = corpus
+        self.device_cfgs = list(device_cfgs)
+        self.mesh = mesh
+        self.log = log
+        self.report: Dict = {}
+
+    # ------------------------------------------------------------------
+    # Phase I
+    # ------------------------------------------------------------------
+    def cluster(self, uploads: Sequence[Dict]):
+        K = self.cfg.moe_cfg.n_experts
+        emb = np.stack([u["embedding"] for u in uploads])
+        arch_ids = [u["arch_id"] for u in uploads]
+        result = clustering.cluster_devices(emb, K, arch_ids=arch_ids,
+                                            seed=self.cfg.seed)
+        proxies = proxy.build_proxies([u["params"] for u in uploads], result,
+                                      arch_ids)
+        self.report["n_clusters"] = len(proxies)
+        self.report["cluster_sizes"] = [len(p["members"]) for p in proxies]
+        self.log(f"Phase I: {len(uploads)} uploads -> {len(proxies)} proxies "
+                 f"{self.report['cluster_sizes']}")
+        return proxies, result
+
+    # ------------------------------------------------------------------
+    # Phase II
+    # ------------------------------------------------------------------
+    def distill_proxy(self, proxy_item: Dict, base_cfg: ModelConfig,
+                      *, init_params=None, seed_offset: int = 0):
+        """Distill one proxy (teacher) into one MoE base model (student)."""
+        scfg = self.cfg
+        t_cfg = self.device_cfgs[proxy_item["arch"]]
+        t_params = proxy_item["params"]
+        key = jax.random.PRNGKey(scfg.seed + 101 + seed_offset)
+        s_params = init_params if init_params is not None else \
+            M.init_params(key, base_cfg)
+        vaa_params = vaa_mod.init_vaa(
+            jax.random.PRNGKey(scfg.seed + 202 + seed_offset),
+            n_stages=scfg.n_stages, d_student=base_cfg.d_model,
+            d_teacher=t_cfg.d_model, d=scfg.vaa_dim, n_heads=scfg.vaa_heads,
+            p_q=scfg.p_q)
+        trainable = {"student": s_params, "vaa": vaa_params}
+        opt = adamw_init(trainable)
+        sched = cosine_schedule(scfg.distill_lr, scfg.distill_steps,
+                                warmup=max(scfg.distill_steps // 20, 1))
+        step = distill.make_distill_step(
+            base_cfg, t_cfg, alpha=scfg.alpha, beta=scfg.beta,
+            temperature=scfg.temperature, n_stages=scfg.n_stages,
+            vaa_heads=scfg.vaa_heads, p_q=scfg.p_q,
+            optimizer_update=adamw_update, mesh=self.mesh)
+        step = jax.jit(step)
+        hist = []
+        for s in range(scfg.distill_steps):
+            batch = self.corpus.mixed_eval_batch(scfg.distill_batch,
+                                                 scfg.seq_len, seed_salt=s)
+            trainable, opt, loss, metrics = step(trainable, opt, t_params,
+                                                 batch, sched(s))
+            hist.append(float(loss))
+        self.log(f"Phase II: proxy c{proxy_item['cluster']} distilled "
+                 f"loss {hist[0]:.3f}->{hist[-1]:.3f}")
+        return trainable["student"], hist
+
+    # ------------------------------------------------------------------
+    # Phase III
+    # ------------------------------------------------------------------
+    def merge_and_tune(self, base_params_list: List):
+        scfg = self.cfg
+        key = jax.random.PRNGKey(scfg.seed + 303)
+        moe_params = merge.merge_into_moe(key, scfg.moe_cfg, base_params_list)
+        mask, opt = tuning.init_tuning(moe_params)
+        self.report["trainable_fraction"] = tuning.trainable_fraction(moe_params)
+        self.log(f"Phase III: trainable fraction "
+                 f"{self.report['trainable_fraction']:.3f}")
+        step = jax.jit(tuning.make_tune_step(scfg.moe_cfg, mask,
+                                             mesh=self.mesh))
+        sched = cosine_schedule(scfg.tune_lr, scfg.tune_steps,
+                                warmup=max(scfg.tune_steps // 20, 1))
+        hist = []
+        for s in range(scfg.tune_steps):
+            batch = self.corpus.mixed_eval_batch(scfg.tune_batch, scfg.seq_len,
+                                                 seed_salt=10_000 + s)
+            moe_params, opt, loss, metrics = step(moe_params, opt, batch,
+                                                  sched(s))
+            hist.append(float(loss))
+        self.log(f"Phase III: tune loss {hist[0]:.3f}->{hist[-1]:.3f}")
+        return moe_params, hist
+
+    # ------------------------------------------------------------------
+    def run(self, uploads: Sequence[Dict]):
+        """Full pipeline.  Returns (moe_params, report)."""
+        t0 = time.time()
+        proxies, _ = self.cluster(uploads)
+        base_cfg = merge.base_config_of(self.cfg.moe_cfg)
+        bases = []
+        for i, p in enumerate(proxies):
+            s_params, hist = self.distill_proxy(p, base_cfg, seed_offset=i)
+            bases.append(s_params)
+        moe_params, tune_hist = self.merge_and_tune(bases)
+        self.report["comm_bytes"] = int(sum(u["upload_bytes"] for u in uploads))
+        self.report["wall_s"] = time.time() - t0
+        return moe_params, self.report

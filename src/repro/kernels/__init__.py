@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the pipeline's compute hot spots.
+
+Each kernel ships three files:
+  kernel.py - ``pl.pallas_call`` body with explicit BlockSpec VMEM tiling,
+  ops.py    - jit-able public wrapper (interpret=True on CPU),
+  ref.py    - pure-jnp oracle the tests sweep against.
+
+Kernels:
+  flash_attention - causal/windowed/softcapped blocked attention
+                    (Gemma-2 local+global; prefill hot spot).
+  moe_gemm        - grouped expert FFN (E, cap, D) x (E, D, F) for the
+                    all-to-all expert-parallel MoE layer.
+  ssd_scan        - Mamba-2 SSD chunked scan (intra-chunk quadratic +
+                    carried state).
+  kd_loss         - fused CE + KL over large vocabularies straight from
+                    hidden states (the KD server hot spot; never
+                    materialises (T, V) logits in HBM).
+"""

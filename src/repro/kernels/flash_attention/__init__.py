@@ -1,0 +1,3 @@
+from repro.kernels.flash_attention import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

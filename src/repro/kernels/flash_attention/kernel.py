@@ -1,0 +1,125 @@
+"""Blocked flash attention for TPU (Pallas).
+
+Grid: (batch*heads, n_q_blocks, n_k_blocks) — the innermost (k) dimension
+is sequential on TPU, so the online-softmax accumulators (running max,
+denominator, output) live in VMEM scratch and persist across k-steps.
+
+BlockSpec tiling (all VMEM):
+  q   : (1, Bq, D)   indexed (bh, qi)
+  k,v : (1, Bk, D)   indexed (bh, ki)
+  out : (1, Bq, D)   indexed (bh, qi)
+
+Supports causal masking, sliding windows (Gemma-2 local layers) and
+attention logit soft-capping.  Fully-masked (q, k) block pairs are
+skipped with ``pl.when`` — on real hardware this prunes ~half the blocks
+for causal prefill and all out-of-window blocks for local layers.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                 scale: float, causal: bool, window: int, softcap: float,
+                 block_q: int, block_k: int, seq_q: int, seq_k: int):
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+    nk = pl.num_programs(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    # static-ish block-level visibility (program ids are dynamic, so this
+    # is a pl.when guard rather than a python `if`)
+    q_start = qi * block_q
+    k_start = ki * block_k
+    visible = jnp.bool_(True)
+    if causal:
+        visible = visible & (k_start <= q_start + block_q - 1)
+    if window:
+        visible = visible & (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)              # (Bq, D)
+        k = k_ref[0].astype(jnp.float32)              # (Bk, D)
+        v = v_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        if softcap:
+            s = jnp.tanh(s / softcap) * softcap
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+        ok = kpos < seq_k
+        if causal:
+            ok = ok & (kpos <= qpos)
+        if window:
+            ok = ok & (kpos > qpos - window)
+        s = jnp.where(ok, s, NEG_INF)
+
+        m_prev = m_scr[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
+        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())))
+        m_scr[...] = m_new
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)
+        o_ref[0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool, window: int,
+                         softcap: float, scale: float,
+                         block_q: int = 128, block_k: int = 128,
+                         interpret: bool = False):
+    """q: (BH, Sq, D), k/v: (BH, Sk, D).  Head dim D should be MXU-friendly
+    (multiple of 128 ideally; smaller dims still work, padded by Mosaic)."""
+    BH, Sq, D = q.shape
+    Sk = k.shape[1]
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pad_q = (-Sq) % bq
+    pad_k = (-Sk) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0)))
+    nq = q.shape[1] // bq
+    nk = k.shape[1] // bk
+
+    kern = functools.partial(
+        _attn_kernel, scale=scale, causal=causal, window=window,
+        softcap=softcap, block_q=bq, block_k=bk, seq_q=Sq, seq_k=Sk)
+    out = pl.pallas_call(
+        kern,
+        grid=(BH, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, ki: (bh, ki, 0)),
+            pl.BlockSpec((1, bk, D), lambda bh, qi, ki: (bh, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, D), lambda bh, qi, ki: (bh, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, nq * bq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :Sq]

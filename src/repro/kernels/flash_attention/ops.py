@@ -1,0 +1,44 @@
+"""Public wrapper: GQA layout handling + CPU interpret fallback."""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
+                                             "block_q", "block_k",
+                                             "interpret"))
+def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal: bool = True,
+                    window: int = 0, softcap: float = 0.0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q: (B, Sq, H, D), k/v: (B, Sk, KH, D) -> (B, Sq, H, D).
+
+    GQA: kv heads are repeated to H inside the wrapper (the kernel is
+    MHA-layout; a grouped-query kernel variant is a listed perf follow-up).
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    B, Sq, H, D = q.shape
+    KH = k.shape[2]
+    if KH != H:
+        rep = H // KH
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qb = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
+    out = flash_attention_bhsd(
+        qb, kb, vb, causal=causal, window=window, softcap=softcap,
+        scale=1.0 / math.sqrt(D), block_q=block_q, block_k=block_k,
+        interpret=interpret)
+    return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

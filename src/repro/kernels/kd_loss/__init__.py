@@ -1,0 +1,3 @@
+from repro.kernels.kd_loss import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,205 @@
+"""Public wrappers with custom VJP.
+
+Forward: the fused Pallas kernel (interpret=True on CPU).
+Backward: the same vocab-streaming pattern expressed as a jnp scan over
+vocab blocks (two passes: lse statistics, then gradient tiles) — XLA
+fuses it tile-by-tile, so the (T, V) logits still never hit HBM whole.
+
+  d CE/d z_s = softmax(z_s) - onehot(label)
+  d KL/d z_s = τ · (softmax(z_s/τ) - softmax(z_t/τ))
+
+The teacher side is stop-gradient by construction (no cotangents for
+ht / wt) — matching Eq. 10, where the teacher is frozen.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.kd_loss.kernel import kd_loss_fwd
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def _softcap_and_grad(z, cap):
+    if not cap:
+        return z, jnp.ones_like(z)
+    t = jnp.tanh(z / cap)
+    return t * cap, 1.0 - t * t
+
+
+def _lse_stats(h, *, softcap, blocks, vocab, block_v, tau: float = 1.0):
+    """Streaming logsumexp over vocab blocks (pad-masked).  Returns (m, l)."""
+    T = h.shape[0]
+    m = jnp.full((T,), -1e30, jnp.float32)
+    l = jnp.zeros((T,), jnp.float32)
+    nv = blocks.shape[0]
+
+    def body(carry, inp):
+        m, l = carry
+        wb, vi = inp
+        z, _ = _softcap_and_grad(h @ wb, softcap)
+        z = z / tau
+        vids = vi * block_v + jnp.arange(z.shape[1])
+        z = jnp.where((vids < vocab)[None, :], z, -1e30)
+        m_new = jnp.maximum(m, jnp.max(z, -1))
+        l = l * jnp.exp(m - m_new) + jnp.sum(jnp.exp(z - m_new[:, None]), -1)
+        return (m_new, l), 0
+
+    (m, l), _ = jax.lax.scan(body, (m, l), (blocks, jnp.arange(nv)))
+    return m, l
+
+
+def _split_vocab(w, block_v):
+    D, V = w.shape
+    pad = (-V) % block_v
+    if pad:
+        w = jnp.pad(w, ((0, 0), (0, pad)))
+    nv = w.shape[1] // block_v
+    return w.T.reshape(nv, block_v, D).transpose(0, 2, 1), pad  # (nv, D, bv)
+
+
+# ---------------------------------------------------------------------------
+# CE only
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5))
+def _ce(hs, ws, labels, softcap, block_v, interpret):
+    ce, _, cor = kd_loss_fwd(hs, ws, None, None, labels, tau=1.0,
+                             softcap_s=softcap, softcap_t=0.0,
+                             block_v=block_v, interpret=interpret)
+    return ce, cor
+
+
+def _ce_fwd(hs, ws, labels, softcap, block_v, interpret):
+    out = _ce(hs, ws, labels, softcap, block_v, interpret)
+    return out, (hs, ws, labels)
+
+
+def _ce_bwd(softcap, block_v, interpret, res, cots):
+    hs, ws, labels = res
+    dce = cots[0]  # (T,)
+    hsf = hs.astype(jnp.float32)
+    blocks, pad = _split_vocab(ws.astype(jnp.float32), block_v)
+    V = ws.shape[1]
+    m, l = _lse_stats(hsf, softcap=softcap, blocks=blocks, vocab=V,
+                      block_v=block_v)
+
+    def body(carry, inp):
+        dhs, dws_blocks_i = carry
+        wb, vi = inp
+        z_raw = hsf @ wb
+        z, dz_cap = _softcap_and_grad(z_raw, softcap)
+        p = jnp.exp(z - m[:, None]) / l[:, None]
+        v0 = vi * block_v
+        vids = v0 + jnp.arange(z.shape[1])
+        onehot = (vids[None, :] == labels[:, None]).astype(jnp.float32)
+        valid = (vids < V).astype(jnp.float32)[None, :]
+        dz = (p - onehot) * dce[:, None] * dz_cap * valid
+        dhs = dhs + dz @ wb.T
+        dwb = hsf.T @ dz
+        return (dhs, 0), dwb
+
+    nv = blocks.shape[0]
+    (dhs, _), dws_blocks = jax.lax.scan(
+        body, (jnp.zeros_like(hsf), 0), (blocks, jnp.arange(nv)))
+    dws = dws_blocks.transpose(1, 0, 2).reshape(hs.shape[1], -1)[:, :V]
+    return dhs.astype(hs.dtype), dws.astype(ws.dtype), None
+
+
+_ce.defvjp(_ce_fwd, _ce_bwd)
+
+
+def ce_from_hidden(hh, w, labels, *, softcap: float = 0.0,
+                   block_v: int = 512, interpret: bool | None = None):
+    """hh: (..., D), labels: (...) -> (nll (...), correct (...))."""
+    if interpret is None:
+        interpret = _on_cpu()
+    shape = labels.shape
+    hs = hh.reshape(-1, hh.shape[-1])
+    ce, cor = _ce(hs, w, labels.reshape(-1), softcap, block_v, interpret)
+    return ce.reshape(shape), cor.reshape(shape)
+
+
+# ---------------------------------------------------------------------------
+# CE + KL
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(5, 6, 7, 8, 9))
+def _ce_kl(hs, ws, ht, wt, labels, tau, softcap_s, softcap_t, block_v,
+           interpret):
+    return kd_loss_fwd(hs, ws, ht, wt, labels, tau=tau, softcap_s=softcap_s,
+                       softcap_t=softcap_t, block_v=block_v,
+                       interpret=interpret)
+
+
+def _ce_kl_fwd(hs, ws, ht, wt, labels, tau, softcap_s, softcap_t, block_v,
+               interpret):
+    out = _ce_kl(hs, ws, ht, wt, labels, tau, softcap_s, softcap_t, block_v,
+                 interpret)
+    return out, (hs, ws, ht, wt, labels)
+
+
+def _ce_kl_bwd(tau, softcap_s, softcap_t, block_v, interpret, res, cots):
+    hs, ws, ht, wt, labels = res
+    dce, dkl = cots[0], cots[1]
+    hsf, htf = hs.astype(jnp.float32), ht.astype(jnp.float32)
+    sblocks, _ = _split_vocab(ws.astype(jnp.float32), block_v)
+    tblocks, _ = _split_vocab(wt.astype(jnp.float32), block_v)
+    V = ws.shape[1]
+
+    # pass 1: statistics (pad-masked)
+    m_s, l_s = _lse_stats(hsf, softcap=softcap_s, blocks=sblocks, vocab=V,
+                          block_v=block_v)
+    m_st, l_st = _lse_stats(hsf, softcap=softcap_s, blocks=sblocks, vocab=V,
+                            block_v=block_v, tau=tau)
+    m_tt, l_tt = _lse_stats(htf, softcap=softcap_t, blocks=tblocks, vocab=V,
+                            block_v=block_v, tau=tau)
+
+    # pass 2: gradient tiles
+    def body(dhs, inp):
+        wsb, wtb, vi = inp
+        zs_raw = hsf @ wsb
+        zs, dcap_s = _softcap_and_grad(zs_raw, softcap_s)
+        zt, _ = _softcap_and_grad(htf @ wtb, softcap_t)
+        p_raw = jnp.exp(zs - m_s[:, None]) / l_s[:, None]
+        p_st = jnp.exp(zs / tau - m_st[:, None]) / l_st[:, None]
+        p_tt = jnp.exp(zt / tau - m_tt[:, None]) / l_tt[:, None]
+        v0 = vi * block_v
+        vids = v0 + jnp.arange(zs.shape[1])
+        onehot = (vids[None, :] == labels[:, None]).astype(jnp.float32)
+        valid = (vids < V).astype(jnp.float32)[None, :]
+        dz = ((p_raw - onehot) * dce[:, None]
+              + tau * (p_st - p_tt) * dkl[:, None]) * dcap_s * valid
+        dhs = dhs + dz @ wsb.T
+        dwb = hsf.T @ dz
+        return dhs, dwb
+
+    nv = sblocks.shape[0]
+    dhs, dws_blocks = jax.lax.scan(
+        body, jnp.zeros_like(hsf), (sblocks, tblocks, jnp.arange(nv)))
+    dws = dws_blocks.transpose(1, 0, 2).reshape(hs.shape[1], -1)[:, :V]
+    # teacher is frozen (Eq. 10): zero cotangents
+    return (dhs.astype(hs.dtype), dws.astype(ws.dtype),
+            jnp.zeros_like(ht), jnp.zeros_like(wt), None)
+
+
+_ce_kl.defvjp(_ce_kl_fwd, _ce_kl_bwd)
+
+
+def ce_kl_from_hidden(hh_s, w_s, hh_t, w_t, labels, *, tau: float = 1.0,
+                      softcap_s: float = 0.0, softcap_t: float = 0.0,
+                      block_v: int = 512, interpret: bool | None = None):
+    """(..., Ds) student + (..., Dt) teacher hiddens -> (ce, kl, correct)."""
+    if interpret is None:
+        interpret = _on_cpu()
+    shape = labels.shape
+    ce, kl, cor = _ce_kl(hh_s.reshape(-1, hh_s.shape[-1]), w_s,
+                         hh_t.reshape(-1, hh_t.shape[-1]), w_t,
+                         labels.reshape(-1), tau, softcap_s, softcap_t,
+                         block_v, interpret)
+    return ce.reshape(shape), kl.reshape(shape), cor.reshape(shape)

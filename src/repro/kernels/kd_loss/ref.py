@@ -1,0 +1,33 @@
+"""jnp oracle for the fused KD loss (dense logits, small shapes only)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _softcap(z, cap):
+    if cap:
+        return jnp.tanh(z / cap) * cap
+    return z
+
+
+def ce_ref(hs, ws, labels, *, softcap: float = 0.0):
+    """Returns (ce (T,), correct (T,))."""
+    z = _softcap(hs.astype(jnp.float32) @ ws.astype(jnp.float32), softcap)
+    lse = jax.nn.logsumexp(z, axis=-1)
+    gold = jnp.take_along_axis(z, labels[:, None], axis=-1)[:, 0]
+    correct = (jnp.argmax(z, -1) == labels).astype(jnp.float32)
+    return lse - gold, correct
+
+
+def ce_kl_ref(hs, ws, ht, wt, labels, *, tau: float = 1.0,
+              softcap_s: float = 0.0, softcap_t: float = 0.0):
+    """Returns (ce (T,), kl (T,), correct (T,))."""
+    zs = _softcap(hs.astype(jnp.float32) @ ws.astype(jnp.float32), softcap_s)
+    zt = _softcap(ht.astype(jnp.float32) @ wt.astype(jnp.float32), softcap_t)
+    ce, correct = ce_ref(hs, ws, labels, softcap=softcap_s)
+    logp_s = jax.nn.log_softmax(zs / tau, axis=-1)
+    logp_t = jax.nn.log_softmax(zt / tau, axis=-1)
+    p_t = jnp.exp(logp_t)
+    kl = jnp.sum(p_t * (logp_t - logp_s), axis=-1) * tau ** 2
+    return ce, kl, correct

@@ -1,0 +1,55 @@
+"""Public wrappers for the grouped expert FFN kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.moe_gemm.kernel import grouped_ffn_ecd
+from repro.kernels.moe_gemm import ref as _ref
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("act", "block_c", "block_f",
+                                             "interpret"))
+def grouped_ffn(x, wg, wu, wo, *, act: str = "silu", block_c: int = 128,
+                block_f: int = 128, interpret: bool | None = None):
+    """Fixed-capacity grouped FFN — drop-in for the a2a expert compute."""
+    if interpret is None:
+        interpret = _on_cpu()
+    return grouped_ffn_ecd(x, wg, wu, wo, act=act, block_c=block_c,
+                           block_f=block_f, interpret=interpret)
+
+
+@functools.partial(jax.jit, static_argnames=("act", "interpret"))
+def moe_ffn(xt, w, idx, wg, wu, wo, *, act: str = "silu",
+            interpret: bool | None = None):
+    """Routed token-level MoE for the single-device path: sorts tokens by
+    expert into capacity buffers, runs the grouped kernel, scatters back."""
+    if interpret is None:
+        interpret = _on_cpu()
+    T, D = xt.shape
+    k = idx.shape[1]
+    E = wg.shape[0]
+    cap = max(-(-T * k // E) * 2, 8)  # generous static capacity
+    flat_e = idx.reshape(-1)
+    flat_w = w.reshape(-1)
+    flat_tok = jnp.arange(T * k, dtype=jnp.int32) // k
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    pos_sorted = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e, "left")
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
+    keep = pos < cap
+    buf = jnp.zeros((E, cap, D), xt.dtype)
+    buf = buf.at[flat_e, jnp.where(keep, pos, 0)].add(
+        jnp.where(keep, 1.0, 0.0)[:, None].astype(xt.dtype) * xt[flat_tok])
+    y = grouped_ffn_ecd(buf, wg, wu, wo, act=act, interpret=interpret)
+    gathered = y[flat_e, jnp.where(keep, pos, 0)]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    out = jnp.zeros((T, D), xt.dtype).at[flat_tok].add(
+        gathered * flat_w[:, None].astype(xt.dtype))
+    return out

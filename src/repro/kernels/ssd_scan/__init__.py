@@ -1,0 +1,3 @@
+from repro.kernels.ssd_scan import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

@@ -1,0 +1,38 @@
+"""Public wrapper: (B, S, H, ...) layout -> kernel (BH, ...) layout."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ssd_scan.kernel import ssd_scan_bh
+
+
+def _on_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd(xh, dt, A, Bh, Ch, *, chunk: int = 128, init_state=None,
+        interpret: bool | None = None):
+    """Model-layer layout: xh (B,S,H,P), dt (B,S,H), A (H,), Bh/Ch (B,S,H,N).
+
+    Returns (y (B,S,H,P), final_state (B,H,P,N)) — matches
+    ``repro.models.ssm.ssd_chunked``.
+    """
+    if interpret is None:
+        interpret = _on_cpu()
+    B, S, H, P = xh.shape
+    N = Bh.shape[-1]
+    xb = xh.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    dtb = dt.transpose(0, 2, 1).reshape(B * H, S)
+    Ab = jnp.tile(A, B)
+    Bb = Bh.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    Cb = Ch.transpose(0, 2, 1, 3).reshape(B * H, S, N)
+    h0 = (jnp.zeros((B * H, P, N), jnp.float32) if init_state is None
+          else init_state.reshape(B * H, P, N))
+    y, hf = ssd_scan_bh(xb, dtb, Ab, Bb, Cb, h0, chunk=chunk,
+                        interpret=interpret)
+    return (y.reshape(B, H, S, P).transpose(0, 2, 1, 3),
+            hf.reshape(B, H, P, N))

@@ -1,0 +1,28 @@
+"""jnp oracle: naive sequential SSM recurrence (exact, O(S) steps)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(x, dt, A, Bm, Cm, h0=None):
+    """x: (BH,S,P); dt: (BH,S); A: (BH,); Bm/Cm: (BH,S,N); h0: (BH,P,N).
+
+    y[t] = C[t] · h[t],   h[t] = exp(dt[t] A) h[t-1] + dt[t] x[t] B[t]^T
+    """
+    BH, S, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+    h = jnp.zeros((BH, P, N), f32) if h0 is None else h0.astype(f32)
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp
+        dec = jnp.exp(dtt * A)[:, None, None]
+        h = h * dec + jnp.einsum("bp,bn->bpn", xt * dtt[:, None], bt)
+        y = jnp.einsum("bn,bpn->bp", ct, h)
+        return h, y
+
+    xs = (x.astype(f32).transpose(1, 0, 2), dt.astype(f32).T,
+          Bm.astype(f32).transpose(1, 0, 2), Cm.astype(f32).transpose(1, 0, 2))
+    h, ys = jax.lax.scan(step, h, xs)
+    return ys.transpose(1, 0, 2).astype(x.dtype), h

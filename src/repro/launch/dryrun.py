@@ -1,0 +1,441 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+# The two lines above MUST run before any other import (jax locks the
+# device count at backend init).  512 placeholder host devices let
+# jax.make_mesh build the production (2, 16, 16) mesh on this CPU-only
+# container; nothing is ever executed — only lower() + compile().
+
+"""Multi-pod dry-run: prove every (architecture x input shape x mesh)
+combination lowers, compiles, fits, and report its roofline inputs.
+
+For each combination this script:
+  1. builds abstract params / optimizer state / caches (eval_shape —
+     no allocation),
+  2. jit-lowers the right step function (train_step / prefill_step /
+     serve_step) with production in/out shardings,
+  3. compiles, prints ``memory_analysis()`` (proves the memory layout
+     fits) and ``cost_analysis()`` (FLOPs / bytes for §Roofline),
+  4. parses collective bytes out of the compiled HLO,
+  5. appends a JSON record under experiments/dryrun/.
+
+Usage:
+  python -m repro.launch.dryrun --arch tinyllama-1.1b --shape train_4k
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-existing]
+"""
+import argparse
+import functools
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ALL, ASSIGNED, SHAPES, get_config, supported
+from repro.launch import mesh as mesh_lib
+from repro.launch.hlo_analysis import collective_bytes, roofline_terms
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, adamw_update
+from repro.sharding import (batch_spec, cache_specs, named, opt_state_specs,
+                            param_specs)
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# Big configs keep Adam moments in bf16 (HBM headroom; EXPERIMENTS §Dry-run).
+OPT_STATE_DTYPE = {"deepseek-v3-671b": jnp.bfloat16}
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for every model input (no allocation)."""
+    shp = SHAPES[shape_name]
+    B, S = shp.global_batch, shp.seq_len
+    f = jnp.dtype(cfg.dtype)
+    i32 = jnp.int32
+    sds = jax.ShapeDtypeStruct
+
+    if shp.kind == "train":
+        if cfg.arch_type == "vlm":
+            s_txt = S - cfg.frontend_tokens
+            return {"tokens": sds((B, s_txt), i32),
+                    "labels": sds((B, s_txt), i32),
+                    "patches": sds((B, cfg.frontend_tokens, cfg.d_model), f)}
+        if cfg.arch_type == "encdec":
+            return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32),
+                    "frames": sds((B, cfg.frontend_tokens, cfg.d_model), f)}
+        return {"tokens": sds((B, S), i32), "labels": sds((B, S), i32)}
+
+    if shp.kind == "prefill":
+        if cfg.arch_type == "vlm":
+            s_txt = S - cfg.frontend_tokens
+            return {"tokens": sds((B, s_txt), i32),
+                    "patches": sds((B, cfg.frontend_tokens, cfg.d_model), f)}
+        if cfg.arch_type == "encdec":
+            return {"tokens": sds((B, S), i32),
+                    "frames": sds((B, cfg.frontend_tokens, cfg.d_model), f)}
+        return {"tokens": sds((B, S), i32)}
+
+    # decode: ONE new token against a seq_len-deep cache
+    cache = jax.eval_shape(
+        functools.partial(M.init_decode_cache, cfg, B, S))
+    return {"cache": cache,
+            "tokens": sds((B, 1), i32),
+            "pos": sds((B,), i32)}
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def make_train_step(cfg: ModelConfig, mesh, n_micro: int = 1):
+    """``n_micro > 1``: gradient accumulation over micro-batches — the
+    per-step activation footprint scales 1/n_micro at the cost of a
+    params-sized f32 accumulator (§Perf iteration Z5)."""
+    def grad_of(params, batch):
+        return jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch, mesh=mesh), has_aux=True)(params)
+
+    def train_step(params, opt_state, batch):
+        if n_micro == 1:
+            (loss, metrics), grads = grad_of(params, batch)
+        else:
+            from jax.sharding import NamedSharding, PartitionSpec as P
+            from repro.sharding import data_axes_of
+            daxes = data_axes_of(mesh)
+            dax = daxes if len(daxes) > 1 else daxes[0]
+
+            def split(x):
+                y = x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+                # keep "data" on the inner batch dim, NOT the scan dim
+                spec = [None, dax] + [None] * (y.ndim - 2)
+                return jax.lax.with_sharding_constraint(
+                    y, NamedSharding(mesh, P(*spec)))
+
+            mb = jax.tree.map(split, batch)
+
+            def micro(carry, b):
+                gsum, loss_sum, acc_sum = carry
+                (loss, metrics), g = grad_of(params, b)
+                gsum = jax.tree.map(
+                    lambda a, x: a + x.astype(jnp.float32), gsum, g)
+                return (gsum, loss_sum + loss,
+                        acc_sum + metrics["accuracy"]), 0
+
+            gz = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, loss_sum, acc_sum), _ = jax.lax.scan(
+                micro, (gz, jnp.zeros(()), jnp.zeros(())), mb)
+            grads = jax.tree.map(lambda g: g / n_micro, gsum)
+            loss = loss_sum / n_micro
+            metrics = {"accuracy": acc_sum / n_micro}
+        params, opt_state, stats = adamw_update(
+            grads, opt_state, params, lr=1e-4, weight_decay=0.01)
+        return params, opt_state, loss, metrics["accuracy"]
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig, mesh):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg, batch, mesh=mesh)
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig, mesh):
+    def serve_step(params, cache, tokens, pos):
+        return M.decode_step(params, cfg, cache, tokens, pos, mesh=mesh)
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# cost calibration (see ModelConfig.scan_unroll): XLA's cost_analysis
+# counts while-loop bodies once, so the production (scanned) module
+# under-reports FLOPs/bytes by ~n_layers.  We lower two UNROLLED
+# reduced-depth variants (compile-only; memory is irrelevant), fit
+# cost = intercept + slope * n_stack_units, and extrapolate to full depth.
+# ---------------------------------------------------------------------------
+
+def _cal_chunks(cfg: ModelConfig, shape_name: str):
+    """Unrolled-calibration chunk sizes.  Long prefills coarsen the
+    attention chunking (compile-time); short sequences keep the
+    PRODUCTION chunking so chunk-granular optimisations (e.g. causal
+    chunk skipping, §Perf Q1) are visible in the calibrated costs."""
+    seq = SHAPES[shape_name].seq_len
+    if SHAPES[shape_name].kind == "decode" or seq <= 8192:
+        aq, ak = cfg.attn_chunk_q, cfg.attn_chunk_k
+    else:
+        aq = ak = 4096
+    return dict(scan_unroll=True, attn_chunk_q=aq, attn_chunk_k=ak,
+                loss_chunk=4096)
+
+
+def calibration_points(cfg: ModelConfig, shape_name: str = "prefill_32k"):
+    """(cfg_a, n_a, cfg_b, n_b, n_full) — n counts main-stack scan units;
+    everything that does not scale with depth (embed, head, MTP, whisper
+    encoder, zamba tail) lands in the intercept."""
+    at = cfg.arch_type
+    CAL = _cal_chunks(cfg, shape_name)
+    if at in ("dense", "moe", "vlm"):
+        lps = cfg.layers_per_scan
+        fd = cfg.first_dense_layers
+        n_full = (cfg.n_layers - fd) // lps
+        return (cfg.replace(n_layers=fd + lps, **CAL), 1,
+                cfg.replace(n_layers=fd + 2 * lps, **CAL), 2, n_full)
+    if at == "ssm":
+        return (cfg.replace(n_layers=1, **CAL), 1,
+                cfg.replace(n_layers=2, **CAL), 2, cfg.n_layers)
+    if at == "hybrid":
+        period = cfg.shared_attn_every
+        n_groups, tail = divmod(cfg.n_layers, period)
+        return (cfg.replace(n_layers=period + tail, **CAL), 1,
+                cfg.replace(n_layers=2 * period + tail, **CAL), 2,
+                n_groups)
+    if at == "encdec":
+        return (cfg.replace(n_layers=1, **CAL), 1,
+                cfg.replace(n_layers=2, **CAL), 2, cfg.n_layers)
+    raise ValueError(at)
+
+
+def _lower_combo(cfg: ModelConfig, shape_name: str, mesh, *, fsdp: bool,
+                 serve_opt: bool = False):
+    """Build + lower the right step for (cfg, shape).  Returns lowered.
+
+    ``serve_opt``: the beyond-paper serving layout (EXPERIMENTS §Perf):
+    weights resident (no FSDP gathers per decode step) and MoE experts
+    sharded one-per-device over the whole mesh (``replicated_ep``)."""
+    shp = SHAPES[shape_name]
+    if serve_opt and shp.kind == "decode":
+        if cfg.is_moe:
+            cfg = cfg.replace(moe_impl="replicated_ep")
+        p_fsdp, ep_all = False, True
+    else:
+        p_fsdp, ep_all = fsdp, False
+    abstract_params = jax.eval_shape(
+        lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    pshard = named(mesh, param_specs(abstract_params, mesh, fsdp=p_fsdp,
+                                     ep_all=ep_all))
+    batch = input_specs(cfg, shape_name)
+    with mesh:
+        if shp.kind == "train":
+            n_micro = getattr(cfg, "_n_micro", 1)
+            opt_dtype = OPT_STATE_DTYPE.get(cfg.name)
+            abstract_opt = jax.eval_shape(
+                functools.partial(adamw_init, state_dtype=opt_dtype),
+                abstract_params)
+            ospecs = opt_state_specs(abstract_params, mesh, fsdp=fsdp)
+            oshard = {"m": named(mesh, ospecs["m"]),
+                      "v": named(mesh, ospecs["v"]),
+                      "step": named(mesh, ospecs["step"])}
+            bshard = named(mesh, batch_spec(batch, mesh))
+            fn = make_train_step(cfg, mesh, n_micro=n_micro)
+            return jax.jit(fn, in_shardings=(pshard, oshard, bshard)).lower(
+                abstract_params, abstract_opt, batch)
+        if shp.kind == "prefill":
+            bshard = named(mesh, batch_spec(batch, mesh))
+            fn = make_prefill_step(cfg, mesh)
+            return jax.jit(fn, in_shardings=(pshard, bshard)).lower(
+                abstract_params, batch)
+        cshard = named(mesh, cache_specs(batch["cache"], mesh,
+                                         batch=shp.global_batch,
+                                         seq=shp.seq_len))
+        tshard = named(mesh, batch_spec(
+            {"tokens": batch["tokens"], "pos": batch["pos"]}, mesh))
+        fn = make_serve_step(cfg, mesh)
+        return jax.jit(fn, in_shardings=(
+            pshard, cshard, tshard["tokens"], tshard["pos"])).lower(
+            abstract_params, batch["cache"], batch["tokens"], batch["pos"])
+
+
+def _cost_of(lowered):
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = collective_bytes(compiled.as_text())
+    return {"flops": float(cost.get("flops", 0.0)),
+            "bytes": float(cost.get("bytes accessed", 0.0)),
+            "coll": float(coll.get("total", 0)),
+            "coll_by_kind": coll}
+
+
+def calibrated_cost(cfg: ModelConfig, shape_name: str, mesh, *, fsdp: bool,
+                    serve_opt: bool = False, verbose: bool = False):
+    cfg_a, n_a, cfg_b, n_b, n_full = calibration_points(cfg, shape_name)
+    t0 = time.time()
+    ca = _cost_of(_lower_combo(cfg_a, shape_name, mesh, fsdp=fsdp,
+                               serve_opt=serve_opt))
+    cb = _cost_of(_lower_combo(cfg_b, shape_name, mesh, fsdp=fsdp,
+                               serve_opt=serve_opt))
+    out = {}
+    for k in ("flops", "bytes", "coll"):
+        slope = (cb[k] - ca[k]) / (n_b - n_a)
+        out[k] = ca[k] + (n_full - n_a) * slope
+        out[k + "_slope_per_unit"] = slope
+    out["n_stack_units"] = n_full
+    out["cal_seconds"] = round(time.time() - t0, 1)
+    if verbose:
+        print(f"  calibration: flops {ca['flops']:.3e}/{cb['flops']:.3e} "
+              f"-> {out['flops']:.3e} ({out['cal_seconds']}s)")
+    return out
+
+
+# ---------------------------------------------------------------------------
+# the dry run
+# ---------------------------------------------------------------------------
+
+def dry_run(arch: str, shape_name: str, *, multi_pod: bool = False,
+            fsdp: bool = True, verbose: bool = True, calibrate: bool = True,
+            serve_opt: bool = False, n_micro: int = 1,
+            cfg_overrides=None) -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.replace(**cfg_overrides)
+    if n_micro > 1:
+        object.__setattr__(cfg, "_n_micro", n_micro)
+    shp = SHAPES[shape_name]
+    ok, why = supported(arch, shape_name)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "status": "SKIP",
+                "mesh": "2x16x16" if multi_pod else "16x16", "reason": why}
+
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    record = {"arch": arch, "shape": shape_name,
+              "mesh": "2x16x16" if multi_pod else "16x16",
+              "kind": shp.kind, "serve_opt": serve_opt}
+    with mesh:
+        lowered = _lower_combo(cfg, shape_name, mesh, fsdp=fsdp,
+                               serve_opt=serve_opt)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    hlo = compiled.as_text()
+    coll = collective_bytes(hlo)
+    if calibrate:
+        cal = calibrated_cost(cfg, shape_name, mesh, fsdp=fsdp,
+                              serve_opt=serve_opt, verbose=verbose)
+        eff_cost = {"flops": cal["flops"], "bytes accessed": cal["bytes"]}
+        eff_coll = {"total": cal["coll"]}
+    else:
+        cal = None
+        eff_cost, eff_coll = cost, coll
+    terms = roofline_terms(eff_cost, eff_coll,
+                           peak_flops=mesh_lib.PEAK_FLOPS_BF16,
+                           hbm_bw=mesh_lib.HBM_BW, ici_bw=mesh_lib.ICI_BW)
+    record.update({
+        "status": "OK",
+        "lower_s": round(t_lower, 1),
+        "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "peak_bytes": (getattr(mem, "argument_size_in_bytes", 0) or 0)
+                          + (getattr(mem, "temp_size_in_bytes", 0) or 0),
+        },
+        "cost_raw_scanned": {k: cost.get(k) for k in
+                             ("flops", "bytes accessed") if k in cost},
+        "cost_calibrated": cal,
+        "collectives_raw_scanned": coll,
+        "roofline": terms,
+        "hlo_collective_count": sum(
+            1 for line in hlo.splitlines()
+            if any(c in line for c in ("all-gather(", "all-reduce(",
+                                       "reduce-scatter(", "all-to-all(",
+                                       "collective-permute("))),
+    })
+    if verbose:
+        hbm_gib = record["memory"]["peak_bytes"] / 2**30 \
+            if record["memory"]["peak_bytes"] else -1
+        print(f"[{arch} x {shape_name} x {record['mesh']}] OK "
+              f"compile={t_compile:.1f}s peak/dev={hbm_gib:.2f}GiB "
+              f"flops/dev={terms['flops_per_device']:.3e} "
+              f"coll/dev={terms['collective_bytes_per_device']:.3e}B "
+              f"dominant={terms['dominant']}")
+        print("  memory_analysis:", record["memory"])
+        print("  cost_analysis (calibrated):",
+              {"flops": terms["flops_per_device"],
+               "bytes": terms["hbm_bytes_per_device"],
+               "collective_bytes": terms["collective_bytes_per_device"]})
+    return record
+
+
+def save_record(record: dict, tag: str = ""):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    name = f"{record['arch']}_{record['shape']}_{record['mesh']}{tag}.json"
+    with open(os.path.join(OUT_DIR, name), "w") as f:
+        json.dump(record, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=sorted(ALL))
+    ap.add_argument("--shape", default=None, choices=sorted(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true",
+                    help="all assigned arch x shape combos")
+    ap.add_argument("--no-fsdp", action="store_true")
+    ap.add_argument("--no-calibrate", action="store_true")
+    ap.add_argument("--serve-opt", action="store_true",
+                    help="beyond-paper serving layout for decode shapes")
+    ap.add_argument("--override", action="append", default=[],
+                    help="cfg overrides key=value (repeatable)")
+    ap.add_argument("--microbatch", type=int, default=1,
+                    help="gradient-accumulation microbatches for train")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+
+    combos = []
+    if args.all:
+        for a in sorted(ASSIGNED):
+            for s in SHAPES:
+                combos.append((a, s))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        combos = [(args.arch, args.shape)]
+
+    failures = []
+    for arch, shape in combos:
+        mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+        path = os.path.join(OUT_DIR, f"{arch}_{shape}_{mesh_tag}{args.tag}.json")
+        if args.skip_existing and os.path.exists(path):
+            print(f"[{arch} x {shape} x {mesh_tag}] cached, skipping")
+            continue
+        try:
+            overrides = {}
+            for ov in args.override:
+                k, v = ov.split("=", 1)
+                try:
+                    v = eval(v, {}, {})
+                except Exception:
+                    pass
+                overrides[k] = v
+            rec = dry_run(arch, shape, multi_pod=args.multi_pod,
+                          fsdp=not args.no_fsdp,
+                          calibrate=not args.no_calibrate,
+                          serve_opt=args.serve_opt, n_micro=args.microbatch,
+                          cfg_overrides=overrides or None)
+            if rec["status"] == "SKIP":
+                print(f"[{arch} x {shape}] SKIP: {rec['reason']}")
+        except Exception as e:  # a failure here is a bug in the system
+            traceback.print_exc()
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": mesh_tag, "status": "FAIL", "error": str(e)[:2000]}
+            failures.append((arch, shape))
+        save_record(rec, args.tag)
+    if failures:
+        print("FAILURES:", failures)
+        raise SystemExit(1)
+    print("dry-run complete")
+
+
+if __name__ == "__main__":
+    main()

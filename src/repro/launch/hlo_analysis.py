@@ -1,0 +1,88 @@
+"""Roofline terms from a lowered/compiled XLA module.
+
+``cost_analysis()`` reports FLOPs and HBM bytes but NOT collective
+traffic — we parse the (post-SPMD, per-device) HLO text and sum the
+output bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction.
+"""
+from __future__ import annotations
+
+import math
+import re
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.  bf16[16,2048,128]{2,1,0}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(m) -> int:
+    dt, dims = m.group(1), m.group(2)
+    if dt not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    for d in dims.split(","):
+        if d:
+            n *= int(d)
+    return n * _DTYPE_BYTES[dt]
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind (per device, per step)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    out["total"] = 0
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        if not s or "=" not in s:
+            continue
+        # "%x = TYPE[...] op-name(...)" or tuple "( ... )"
+        rhs = s.split("=", 1)[1]
+        opm = re.search(r"\)?\s*([a-z0-9-]+)\(", rhs)
+        if not opm:
+            continue
+        op = opm.group(1)
+        kind = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-"):  # e.g. all-gather-start
+                kind = c
+                break
+        if kind is None:
+            continue
+        if op.endswith("-done"):
+            continue  # avoid double counting start/done pairs
+        type_part = rhs[:opm.start()]
+        nbytes = sum(_shape_bytes(m) for m in _SHAPE_RE.finditer(type_part))
+        out[kind] += nbytes
+        out["total"] += nbytes
+    return out
+
+
+def roofline_terms(cost: Dict, coll: Dict[str, int], *, peak_flops: float,
+                   hbm_bw: float, ici_bw: float) -> Dict[str, float]:
+    """All inputs are per-device.  Terms in seconds."""
+    # clamp: two-point calibration slopes can go microscopically negative
+    flops = max(float(cost.get("flops", 0.0)), 0.0)
+    bytes_hbm = max(float(cost.get("bytes accessed", 0.0)), 0.0)
+    bytes_coll = max(float(coll.get("total", 0)), 0.0)
+    t_compute = flops / peak_flops
+    t_memory = bytes_hbm / hbm_bw
+    t_coll = bytes_coll / ici_bw
+    dominant = max((("compute", t_compute), ("memory", t_memory),
+                    ("collective", t_coll)), key=lambda kv: kv[1])[0]
+    return {
+        "flops_per_device": flops,
+        "hbm_bytes_per_device": bytes_hbm,
+        "collective_bytes_per_device": bytes_coll,
+        "t_compute_s": t_compute,
+        "t_memory_s": t_memory,
+        "t_collective_s": t_coll,
+        "dominant": dominant,
+    }

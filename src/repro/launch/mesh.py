@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+Kept as FUNCTIONS (never module-level constants) so importing this
+module never touches jax device state — the dry-run must set
+XLA_FLAGS before anything initialises the backend.
+
+Production target: TPU v5e, 256 chips/pod.
+  single pod : (data=16, model=16)
+  multi-pod  : (pod=2, data=16, model=16) — "pod" extends the gradient
+               all-reduce across the inter-pod (DCN-class) links.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh():
+    """Whatever the current host offers (tests / examples)."""
+    n = len(jax.devices())
+    return jax.make_mesh((1, n), ("data", "model"))
+
+
+# v5e hardware constants for the roofline (per chip)
+PEAK_FLOPS_BF16 = 197e12     # FLOP/s
+HBM_BW = 819e9               # B/s
+ICI_BW = 50e9                # B/s per link (~ per chip, one direction)
+HBM_BYTES = 16 * 1024 ** 3   # 16 GiB

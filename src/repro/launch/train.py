@@ -1,0 +1,93 @@
+"""Training launcher: pjit data+tensor+expert-parallel LM training.
+
+On real hardware this drives the production mesh; on this container it
+runs reduced configs on the host mesh.  The same step function is what
+the dry-run lowers for the full configs.
+
+  PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
+      --variant reduced --steps 20 --batch 8 --seq 128
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.federated import FederatedCorpus
+from repro.launch.mesh import make_host_mesh, make_production_mesh
+from repro.models import model as M
+from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.sharding import batch_spec, named, opt_state_specs, param_specs
+from repro.checkpoint import save_pytree
+
+
+def make_batch(cfg, corpus, step, batch, seq):
+    b = corpus.mixed_eval_batch(batch, seq, seed_salt=step)
+    if cfg.arch_type == "vlm":
+        b["patches"] = jnp.zeros((batch, cfg.frontend_tokens, cfg.d_model),
+                                 jnp.dtype(cfg.dtype))
+    if cfg.arch_type == "encdec":
+        b["frames"] = jnp.zeros((batch, cfg.frontend_tokens, cfg.d_model),
+                                jnp.dtype(cfg.dtype))
+    return b
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--variant", default="reduced",
+                    choices=["full", "reduced"])
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--production-mesh", action="store_true")
+    ap.add_argument("--save", default="")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch, variant=args.variant)
+    if args.variant == "reduced":
+        cfg = cfg.replace(vocab_size=args.vocab)
+    mesh = (make_production_mesh() if args.production_mesh
+            else make_host_mesh())
+    corpus = FederatedCorpus.build(seed=0, n_devices=4, n_domains=4,
+                                   vocab=cfg.vocab_size)
+
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    opt = adamw_init(params)
+    pshard = named(mesh, param_specs(params, mesh))
+    oshard = {"m": named(mesh, param_specs(params, mesh)),
+              "v": named(mesh, param_specs(params, mesh)),
+              "step": named(mesh, opt_state_specs(params, mesh)["step"])}
+    params = jax.device_put(params, pshard)
+    sched = cosine_schedule(args.lr, args.steps, warmup=max(args.steps // 20, 1))
+
+    def step_fn(params, opt, batch, lr):
+        (loss, metrics), g = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, batch, mesh=mesh), has_aux=True)(params)
+        params, opt, stats = adamw_update(g, opt, params, lr=lr,
+                                          weight_decay=0.01)
+        return params, opt, loss, metrics["accuracy"], stats["grad_norm"]
+
+    with mesh:
+        jitted = jax.jit(step_fn)
+        t0 = time.time()
+        for s in range(args.steps):
+            batch = make_batch(cfg, corpus, s, args.batch, args.seq)
+            params, opt, loss, acc, gn = jitted(params, opt, batch, sched(s))
+            if s % max(args.steps // 10, 1) == 0 or s == args.steps - 1:
+                print(f"step {s:4d} loss {float(loss):.4f} "
+                      f"acc {float(acc):.3f} gnorm {float(gn):.2e} "
+                      f"({time.time()-t0:.1f}s)")
+    if args.save:
+        save_pytree(params, args.save)
+        print("saved", args.save)
+
+
+if __name__ == "__main__":
+    main()

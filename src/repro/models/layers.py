@@ -1,0 +1,469 @@
+"""Core neural layers: norms, RoPE, attention (GQA + MLA), MLPs.
+
+Everything is a pure function over explicit parameter pytrees.  Attention
+ships two execution paths:
+
+* a chunked online-softmax ("flash-style") jnp implementation — the XLA
+  path used for training / prefill at long sequence lengths without ever
+  materialising the (Sq, Sk) score matrix;
+* a Pallas TPU kernel (``repro.kernels.flash_attention``) selected with
+  ``cfg.use_pallas`` (validated under ``interpret=True`` on CPU).
+
+Decode (single-token query vs. a long cache) uses a direct einsum — it is
+O(S) per step and memory-light.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+NEG_INF = -1.0e30
+
+
+# ---------------------------------------------------------------------------
+# initialisers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, in_axis: int = 0, dtype=jnp.float32):
+    """Truncated-normal fan-in init (LeCun-style), stored in model dtype."""
+    fan_in = shape[in_axis] if isinstance(in_axis, int) else 1
+    std = 1.0 / math.sqrt(max(fan_in, 1))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(cfg: ModelConfig, d: int, dtype):
+    if cfg.norm_type == "layernorm":
+        return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def apply_norm(p, x, eps: float = 1e-6):
+    xf = x.astype(jnp.float32)
+    if "bias" in p:  # layernorm
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+        y = y * p["scale"].astype(jnp.float32) + p["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(ms + eps) * p["scale"].astype(jnp.float32)
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary position embedding
+# ---------------------------------------------------------------------------
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, D) with D even; positions: broadcastable to (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(0, half, dtype=jnp.float32) * (math.log(theta) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]  # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(positions, d: int):
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (math.log(10000.0) / max(half - 1, 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# masking helper
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int):
+    """Additive bias (..., Sq, Sk) from absolute positions. k_pos < 0 = pad."""
+    qp = q_pos[..., :, None]
+    kp = k_pos[..., None, :]
+    ok = kp >= 0
+    if causal:
+        ok = ok & (kp <= qp)
+    if window:
+        ok = ok & (kp > qp - window)
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _softcap(s, cap: float):
+    if cap and cap > 0.0:
+        return jnp.tanh(s / cap) * cap
+    return s
+
+
+# ---------------------------------------------------------------------------
+# chunked online-softmax attention (XLA flash path)
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q, k, v, q_pos, k_pos, *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: Optional[float] = None,
+    q_chunk: int = 1024,
+    k_chunk: int = 1024,
+    skip_masked_chunks: bool = False,
+    unroll: bool = False,
+    remat_chunks: bool = False,
+):
+    """q: (B,Sq,H,Dq)  k: (B,Sk,KH,Dq)  v: (B,Sk,KH,Dv)  ->  (B,Sq,H,Dv).
+
+    Never materialises (Sq, Sk); accumulates in f32 with a running
+    max/denominator (online softmax).  With ``skip_masked_chunks`` the
+    (statically known) fully-masked chunk pairs — above the causal
+    diagonal, or outside the sliding window — are skipped entirely, which
+    halves causal-prefill FLOPs and makes local-attention cost O(S·W).
+    """
+    B, Sq, H, Dq = q.shape
+    _, Sk, KH, _ = k.shape
+    Dv = v.shape[-1]
+    G = H // KH
+    if scale is None:
+        scale = 1.0 / math.sqrt(Dq)
+
+    qc = min(q_chunk, Sq)
+    kc = min(k_chunk, Sk)
+    # pad to multiples
+    Sq_p = -(-Sq // qc) * qc
+    Sk_p = -(-Sk // kc) * kc
+    q = jnp.pad(q, ((0, 0), (0, Sq_p - Sq), (0, 0), (0, 0)))
+    k = jnp.pad(k, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    v = jnp.pad(v, ((0, 0), (0, Sk_p - Sk), (0, 0), (0, 0)))
+    q_pos = jnp.pad(q_pos, ((0, 0), (0, Sq_p - Sq)), constant_values=0)
+    k_pos = jnp.pad(k_pos, ((0, 0), (0, Sk_p - Sk)), constant_values=-1)
+
+    nq, nk = Sq_p // qc, Sk_p // kc
+    # (B, KH, G, nq, qc, D)
+    qr = q.reshape(B, nq, qc, KH, G, Dq).transpose(1, 0, 3, 4, 2, 5)
+    kr = k.reshape(B, nk, kc, KH, Dq).transpose(1, 0, 3, 2, 4)
+    vr = v.reshape(B, nk, kc, KH, Dv).transpose(1, 0, 3, 2, 4)
+    qp = q_pos.reshape(B, nq, qc).transpose(1, 0, 2)
+    kp = k_pos.reshape(B, nk, kc).transpose(1, 0, 2)
+
+    def kv_step_inner(carry, inputs, q_blk, qp_blk):
+        m, l, o = carry
+        k_blk, v_blk, kp_blk = inputs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", q_blk.astype(jnp.float32),
+                       k_blk.astype(jnp.float32)) * scale
+        s = _softcap(s, softcap)
+        bias = _mask_bias(qp_blk, kp_blk, causal=causal, window=window)
+        s = s + bias[:, None, None]
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        o_new = o * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p, v_blk.astype(jnp.float32))
+        return (m_new, l_new, o_new), None
+
+    if remat_chunks:
+        # recompute s/p during backward: the saved residuals per kv-chunk
+        # drop from O(qc*kc) score tensors to the O(qc) m/l/o carries
+        kv_step = jax.checkpoint(
+            lambda c, i, qb, qpb: kv_step_inner(c, i, qb, qpb),
+            static_argnums=())
+    else:
+        kv_step = kv_step_inner
+
+    def q_step(q_blk, qp_blk, qi):
+        m0 = jnp.full((B, KH, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qc), jnp.float32)
+        o0 = jnp.zeros((B, KH, G, qc, Dv), jnp.float32)
+        if skip_masked_chunks:
+            # static chunk-level visibility: q rows of chunk qi span
+            # [qi*qc, qi*qc+qc); k chunk ki spans [ki*kc, ki*kc+kc).
+            carry = (m0, l0, o0)
+            for ki in range(nk):
+                if causal and ki * kc > qi * qc + qc - 1:
+                    continue  # entirely above the causal diagonal
+                if window and (ki * kc + kc - 1) <= (qi * qc - window):
+                    continue  # entirely left of every query's window
+                carry, _ = kv_step(carry, (kr[ki], vr[ki], kp[ki]), q_blk, qp_blk)
+            m, l, o = carry
+        else:
+            (m, l, o), _ = jax.lax.scan(
+                lambda c, x: kv_step(c, x, q_blk, qp_blk), (m0, l0, o0),
+                (kr, vr, kp), unroll=nk if unroll else 1)
+        return o / jnp.maximum(l, 1e-30)[..., None]
+
+    if skip_masked_chunks or unroll:
+        outs = [q_step(qr[qi], qp[qi], qi) for qi in range(nq)]
+        out = jnp.stack(outs, axis=0)
+    else:
+        out = jax.lax.map(lambda args: q_step(args[0], args[1], 0), (qr, qp))
+    # (nq, B, KH, G, qc, Dv) -> (B, Sq, H, Dv)
+    out = out.transpose(1, 0, 4, 2, 3, 5).reshape(B, Sq_p, H, Dv)
+    return out[:, :Sq].astype(v.dtype)
+
+
+def _constrain_seq(x, mesh, dim):
+    """Keep a decode score tensor sharded (batch x data, cache-seq x model).
+
+    Without this XLA (on the 16x16 mesh) prefers to ALL-GATHER the KV /
+    MLA-latent cache over the "model" axis per layer — for deepseek-v3
+    decode_32k that is ~260 GB of ICI traffic per step.  Constraining the
+    scores keeps the einsum sequence-sharded; softmax then needs only a
+    tiny max/sum all-reduce.  The batch dim must be pinned to the data
+    axes at the same time, or XLA replicates the whole score computation
+    per device (EXPERIMENTS.md §Perf, iterations D1/D4).
+    """
+    if mesh is None or "model" not in getattr(mesh, "axis_names", ()):
+        return x
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    spec = [None] * x.ndim
+    spec[dim] = "model"
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+    n_data = 1
+    for a in daxes:
+        n_data *= mesh.shape[a]
+    if n_data > 1 and x.shape[0] % n_data == 0:
+        spec[0] = daxes if len(daxes) > 1 else daxes[0]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def decode_attention(q, k_cache, v_cache, q_pos, k_pos, *,
+                     window: int = 0, softcap: float = 0.0,
+                     scale: Optional[float] = None, causal: bool = True,
+                     mesh=None):
+    """Single-step attention.  q: (B,1,H,Dq); caches: (B,S,KH,D*)."""
+    B, _, H, Dq = q.shape
+    KH = k_cache.shape[2]
+    G = H // KH
+    if scale is None:
+        scale = 1.0 / math.sqrt(Dq)
+    qr = q.reshape(B, 1, KH, G, Dq)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * scale
+    s = _constrain_seq(s, mesh, 4)
+    s = _softcap(s, softcap)
+    bias = _mask_bias(q_pos, k_pos, causal=causal, window=window)
+    s = s + bias[:, None, None]
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, H, v_cache.shape[-1]).astype(v_cache.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention layer
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ModelConfig, dtype):
+    D, H, KH, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * Dh), 0, dtype),
+        "wk": dense_init(ks[1], (D, KH * Dh), 0, dtype),
+        "wv": dense_init(ks[2], (D, KH * Dh), 0, dtype),
+        "wo": dense_init(ks[3], (H * Dh, D), 0, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.ones((Dh,), dtype)}
+        p["k_norm"] = {"scale": jnp.ones((Dh,), dtype)}
+    return p
+
+
+def attention_qkv(p, cfg: ModelConfig, x, positions):
+    B, S, D = x.shape
+    H, KH, Dh = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, Dh)
+    k = (x @ p["wk"]).reshape(B, S, KH, Dh)
+    v = (x @ p["wv"]).reshape(B, S, KH, Dh)
+    if cfg.qk_norm:
+        q = apply_norm(p["q_norm"], q)
+        k = apply_norm(p["k_norm"], k)
+    if cfg.pos_embedding == "rope":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_full(p, cfg: ModelConfig, x, positions, *, window: int,
+                   causal: bool = True):
+    """Full-sequence (train / prefill) attention. Returns (out, (k, v))."""
+    q, k, v = attention_qkv(p, cfg, x, positions)
+    if cfg.use_pallas:
+        from repro.kernels.flash_attention import ops as fa_ops
+        out = fa_ops.flash_attention(
+            q, k, v, positions, positions, causal=causal, window=window,
+            softcap=cfg.attn_logit_softcap)
+    else:
+        out = chunked_attention(
+            q, k, v, positions, positions, causal=causal, window=window,
+            softcap=cfg.attn_logit_softcap,
+            q_chunk=cfg.attn_chunk_q, k_chunk=cfg.attn_chunk_k,
+            skip_masked_chunks=cfg.attn_skip_masked_chunks,
+            unroll=cfg.scan_unroll, remat_chunks=cfg.remat_attn_chunks)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ p["wo"], (k, v)
+
+
+def attention_decode(p, cfg: ModelConfig, x, pos, k_cache, v_cache, *,
+                     window: int, mesh=None):
+    """Single-token decode.  x: (B,1,D); caches (B,Smax,KH,Dh).
+
+    Inserts this step's k/v at ``pos`` (per-batch scatter), attends over
+    the updated cache, returns (out, (k_cache, v_cache)).
+    """
+    B = x.shape[0]
+    q, k, v = attention_qkv(p, cfg, x, pos[:, None])
+    bidx = jnp.arange(B)
+    k_cache = k_cache.at[bidx, pos].set(k[:, 0].astype(k_cache.dtype))
+    v_cache = v_cache.at[bidx, pos].set(v[:, 0].astype(v_cache.dtype))
+    Smax = k_cache.shape[1]
+    k_pos = jnp.arange(Smax)[None, :].repeat(B, 0)
+    k_pos = jnp.where(k_pos <= pos[:, None], k_pos, -1)
+    out = decode_attention(q, k_cache, v_cache, pos[:, None], k_pos,
+                           window=window, softcap=cfg.attn_logit_softcap,
+                           mesh=mesh)
+    return out.reshape(B, 1, -1) @ p["wo"], (k_cache, v_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def init_mla(key, cfg: ModelConfig, dtype):
+    D, H = cfg.d_model, cfg.n_heads
+    r, pr = cfg.kv_lora_rank, cfg.rope_head_dim
+    nd, vd = cfg.nope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 7)
+    p = {
+        "wkv_a": dense_init(ks[0], (D, r + pr), 0, dtype),
+        "kv_norm": {"scale": jnp.ones((r,), dtype)},
+        "wk_b": dense_init(ks[1], (H, r, nd), 1, dtype),
+        "wv_b": dense_init(ks[2], (H, r, vd), 1, dtype),
+        "wo": dense_init(ks[3], (H * vd, D), 0, dtype),
+    }
+    if cfg.q_lora_rank:
+        p["wq_a"] = dense_init(ks[4], (D, cfg.q_lora_rank), 0, dtype)
+        p["q_norm"] = {"scale": jnp.ones((cfg.q_lora_rank,), dtype)}
+        p["wq_b"] = dense_init(ks[5], (cfg.q_lora_rank, H * (nd + pr)), 0, dtype)
+    else:
+        p["wq"] = dense_init(ks[6], (D, H * (nd + pr)), 0, dtype)
+    return p
+
+
+def _mla_queries(p, cfg: ModelConfig, x, positions):
+    B, S, _ = x.shape
+    H, nd, pr = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim
+    if cfg.q_lora_rank:
+        q = apply_norm(p["q_norm"], x @ p["wq_a"]) @ p["wq_b"]
+    else:
+        q = x @ p["wq"]
+    q = q.reshape(B, S, H, nd + pr)
+    q_nope, q_rope = q[..., :nd], q[..., nd:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_latent(p, cfg: ModelConfig, x, positions):
+    """Compressed KV: returns (ckv (B,S,r), k_rope (B,S,pr))."""
+    r = cfg.kv_lora_rank
+    kv = x @ p["wkv_a"]
+    ckv = apply_norm(p["kv_norm"], kv[..., :r])
+    k_rope = apply_rope(kv[..., None, r:], positions, cfg.rope_theta)[..., 0, :]
+    return ckv, k_rope
+
+
+def mla_full(p, cfg: ModelConfig, x, positions):
+    """Training / prefill MLA.  Returns (out, (ckv, k_rope))."""
+    B, S, _ = x.shape
+    H, nd, pr, vd = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    q_nope, q_rope = _mla_queries(p, cfg, x, positions)
+    ckv, k_rope = mla_latent(p, cfg, x, positions)
+    k_nope = jnp.einsum("bsr,hrn->bshn", ckv, p["wk_b"].astype(ckv.dtype))
+    v = jnp.einsum("bsr,hrv->bshv", ckv, p["wv_b"].astype(ckv.dtype))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope[:, :, None], (B, S, H, pr))], axis=-1)
+    out = chunked_attention(
+        q, k, v, positions, positions, causal=True,
+        scale=1.0 / math.sqrt(nd + pr),
+        q_chunk=cfg.attn_chunk_q, k_chunk=cfg.attn_chunk_k,
+        skip_masked_chunks=cfg.attn_skip_masked_chunks,
+        unroll=cfg.scan_unroll, remat_chunks=cfg.remat_attn_chunks)
+    return out.reshape(B, S, H * vd) @ p["wo"], (ckv, k_rope)
+
+
+def mla_decode(p, cfg: ModelConfig, x, pos, ckv_cache, krope_cache,
+               mesh=None):
+    """Absorbed-matrix MLA decode: attends directly in the latent space.
+
+    The 576-float/token latent cache is what makes DeepSeek-V3 long-context
+    decode feasible (long_500k).  Inserts this step's latent, attends, and
+    returns (out, (ckv_cache, krope_cache)).
+    """
+    B = x.shape[0]
+    H, nd, pr, vd = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
+    ckv_t, krope_t = mla_latent(p, cfg, x, pos[:, None])
+    bidx = jnp.arange(B)
+    ckv_cache = ckv_cache.at[bidx, pos].set(ckv_t[:, 0].astype(ckv_cache.dtype))
+    krope_cache = krope_cache.at[bidx, pos].set(krope_t[:, 0].astype(krope_cache.dtype))
+    q_nope, q_rope = _mla_queries(p, cfg, x, pos[:, None])
+    # absorb W_UK into the query:  (B,1,H,nd) x (H,r,nd) -> (B,1,H,r)
+    q_lat = jnp.einsum("bqhn,hrn->bqhr", q_nope, p["wk_b"].astype(q_nope.dtype))
+    Smax = ckv_cache.shape[1]
+    k_pos = jnp.arange(Smax)[None, :].repeat(B, 0)
+    k_pos = jnp.where(k_pos <= pos[:, None], k_pos, -1)
+    s = (jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(jnp.float32),
+                    ckv_cache.astype(jnp.float32))
+         + jnp.einsum("bqhp,bsp->bhqs", q_rope.astype(jnp.float32),
+                      krope_cache.astype(jnp.float32)))
+    s = _constrain_seq(s, mesh, 3)
+    s = s / math.sqrt(nd + pr)
+    s = s + _mask_bias(pos[:, None], k_pos, causal=True, window=0)[:, None]
+    w = jax.nn.softmax(s, axis=-1)
+    ctx = jnp.einsum("bhqs,bsr->bqhr", w, ckv_cache.astype(jnp.float32))
+    v = jnp.einsum("bqhr,hrv->bqhv", ctx, p["wv_b"].astype(jnp.float32))
+    out = v.reshape(B, 1, H * vd).astype(x.dtype) @ p["wo"]
+    return out, (ckv_cache, krope_cache)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ModelConfig, d_in: int, d_hidden: int, dtype):
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_gated:
+        return {
+            "wi_gate": dense_init(ks[0], (d_in, d_hidden), 0, dtype),
+            "wi_up": dense_init(ks[1], (d_in, d_hidden), 0, dtype),
+            "wo": dense_init(ks[2], (d_hidden, d_in), 0, dtype),
+        }
+    return {
+        "wi": dense_init(ks[0], (d_in, d_hidden), 0, dtype),
+        "wo": dense_init(ks[2], (d_hidden, d_in), 0, dtype),
+    }
+
+
+def _act(cfg: ModelConfig, x):
+    if cfg.act == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    return jax.nn.silu(x)
+
+
+def apply_mlp(p, cfg: ModelConfig, x):
+    if "wi_gate" in p:
+        h = _act(cfg, x @ p["wi_gate"]) * (x @ p["wi_up"])
+    else:
+        h = _act(cfg, x @ p["wi"])
+    return h @ p["wo"]

@@ -1,0 +1,781 @@
+"""Model assembly: init / loss / prefill / decode for every arch family.
+
+Layer parameters are **stacked** along a leading "group" axis and the
+layer stack executes under ``jax.lax.scan`` — the HLO stays compact no
+matter how deep the model is (81-layer Zamba-2 and 61-layer DeepSeek-V3
+compile in seconds on the 512-device placeholder mesh).
+
+Layouts:
+  dense/moe/vlm : blocks are groups of ``len(cfg.attn_pattern)`` sub-layers
+                  (gemma-2 alternates local/global inside one group).
+  moe w/ leading dense layers (DeepSeek): two stacks, scanned in sequence.
+  ssm           : one stack of Mamba-2 blocks.
+  hybrid        : (groups, period) nested stacks of Mamba-2 blocks with one
+                  *shared* attention block applied at the top of each group
+                  (Zamba-2's parameter-sharing trick) + a tail stack.
+  encdec        : encoder stack + decoder stack with cross-attention.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models import layers, moe, ssm
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _dtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def _data_axes(mesh):
+    if mesh is None:
+        return None
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def shard_act(x, mesh, *, batch_dim: int = 0):
+    """Constrain an activation's batch dim onto the data axes."""
+    if mesh is None or mesh.size == 1:
+        return x
+    axes = _data_axes(mesh)
+    n_data = 1
+    for a in axes:
+        n_data *= mesh.shape[a]
+    if x.shape[batch_dim] % n_data != 0:
+        return x  # tiny decode batches (long_500k B=1) stay replicated
+    spec = [None] * x.ndim
+    spec[batch_dim] = axes if len(axes) > 1 else axes[0]
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def _stacked_init(fn, key, n: int):
+    """vmap an init function over a leading group axis."""
+    return jax.vmap(fn)(jax.random.split(key, n))
+
+
+def _window_for(cfg: ModelConfig, kind: str) -> int:
+    return cfg.sliding_window if kind == "local" else 0
+
+
+def _scan(cfg: ModelConfig, body, init, xs):
+    n = jax.tree.leaves(xs)[0].shape[0]
+    return jax.lax.scan(body, init, xs,
+                        unroll=n if cfg.scan_unroll else 1)
+
+
+def _maybe_remat(cfg: ModelConfig, fn):
+    if not cfg.remat:
+        return fn
+    if cfg.remat_policy == "dots":
+        policy = jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims
+        return jax.checkpoint(fn, policy=policy)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# transformer block (dense / moe / vlm sub-layer)
+# ---------------------------------------------------------------------------
+
+def _init_block(key, cfg: ModelConfig, *, use_moe: bool, dtype):
+    ks = jax.random.split(key, 4)
+    p: Dict[str, Any] = {"ln1": layers.init_norm(cfg, cfg.d_model, dtype),
+                         "ln2": layers.init_norm(cfg, cfg.d_model, dtype)}
+    if cfg.attn_type == "mla":
+        p["attn"] = layers.init_mla(ks[0], cfg, dtype)
+    else:
+        p["attn"] = layers.init_attention(ks[0], cfg, dtype)
+    if use_moe:
+        p["moe"] = moe.init_moe(ks[1], cfg, dtype)
+    else:
+        p["mlp"] = layers.init_mlp(ks[1], cfg, cfg.d_model, cfg.d_ff, dtype)
+    if cfg.post_block_norm:
+        p["ln1_post"] = layers.init_norm(cfg, cfg.d_model, dtype)
+        p["ln2_post"] = layers.init_norm(cfg, cfg.d_model, dtype)
+    return p
+
+
+def _block_full(p, cfg: ModelConfig, x, positions, *, kind: str, mesh,
+                causal: bool = True):
+    """Full-sequence sub-layer.  Returns (x, aux, cache_entry)."""
+    window = _window_for(cfg, kind)
+    h = layers.apply_norm(p["ln1"], x)
+    if cfg.attn_type == "mla":
+        attn_out, (ckv, kr) = layers.mla_full(p["attn"], cfg, h, positions)
+        kv = {"ckv": ckv, "kr": kr}
+    else:
+        attn_out, (k, v) = layers.attention_full(p["attn"], cfg, h, positions,
+                                                 window=window, causal=causal)
+        kv = {"k": k, "v": v}
+    if cfg.post_block_norm:
+        attn_out = layers.apply_norm(p["ln1_post"], attn_out)
+    x = x + attn_out
+    h = layers.apply_norm(p["ln2"], x)
+    aux = jnp.zeros((), jnp.float32)
+    if "moe" in p:
+        ffn_out, aux = moe.apply_moe(p["moe"], cfg, h, mesh)
+    else:
+        ffn_out = layers.apply_mlp(p["mlp"], cfg, h)
+    if cfg.post_block_norm:
+        ffn_out = layers.apply_norm(p["ln2_post"], ffn_out)
+    x = x + ffn_out
+    x = shard_act(x, mesh)
+    return x, aux, kv
+
+
+def _block_decode(p, cfg: ModelConfig, x, pos, cache, *, kind: str, mesh):
+    """Single-token sub-layer.  cache: dict of per-layer tensors."""
+    window = _window_for(cfg, kind)
+    h = layers.apply_norm(p["ln1"], x)
+    if cfg.attn_type == "mla":
+        attn_out, (ckv, kr) = layers.mla_decode(p["attn"], cfg, h, pos,
+                                                cache["ckv"], cache["kr"],
+                                                mesh=mesh)
+        new_cache = {"ckv": ckv, "kr": kr}
+    else:
+        attn_out, (kc, vc) = layers.attention_decode(
+            p["attn"], cfg, h, pos, cache["k"], cache["v"], window=window,
+            mesh=mesh)
+        new_cache = {"k": kc, "v": vc}
+    if cfg.post_block_norm:
+        attn_out = layers.apply_norm(p["ln1_post"], attn_out)
+    x = x + attn_out
+    h = layers.apply_norm(p["ln2"], x)
+    if "moe" in p:
+        ffn_out, _ = moe.apply_moe(p["moe"], cfg, h, mesh)
+    else:
+        ffn_out = layers.apply_mlp(p["mlp"], cfg, h)
+    if cfg.post_block_norm:
+        ffn_out = layers.apply_norm(p["ln2_post"], ffn_out)
+    # keep decode activations batch-sharded: without this the
+    # replicated_ep MoE path leaves x replicated and every subsequent
+    # attention layer runs the FULL batch on EVERY device (§Perf D3)
+    x = shard_act(x + ffn_out, mesh)
+    return x, new_cache
+
+
+def _attn_cache_struct(cfg: ModelConfig, B: int, S: int, dtype):
+    if cfg.attn_type == "mla":
+        return {"ckv": jnp.zeros((B, S, cfg.kv_lora_rank), dtype),
+                "kr": jnp.zeros((B, S, cfg.rope_head_dim), dtype)}
+    KH, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+    return {"k": jnp.zeros((B, S, KH, Dh), dtype),
+            "v": jnp.zeros((B, S, KH, Dh), dtype)}
+
+
+# ===========================================================================
+# dense / moe / vlm family
+# ===========================================================================
+
+def _init_decoder_stacks(key, cfg: ModelConfig, dtype):
+    lps = cfg.layers_per_scan
+    p = {}
+    kd, km = jax.random.split(key)
+    n_dense_groups = cfg.first_dense_layers  # leading dense layers (deepseek)
+    n_main = cfg.n_layers - n_dense_groups
+    assert n_main % lps == 0
+    n_groups = n_main // lps
+
+    def group_init(k, use_moe):
+        ks = jax.random.split(k, lps)
+        return {f"sub{i}": _init_block(ks[i], cfg, use_moe=use_moe, dtype=dtype)
+                for i in range(lps)}
+
+    if n_dense_groups:
+        p["dense_blocks"] = _stacked_init(
+            lambda k: {"sub0": _init_block(k, cfg, use_moe=False, dtype=dtype)},
+            kd, n_dense_groups)
+    p["blocks"] = _stacked_init(
+        functools.partial(group_init, use_moe=cfg.is_moe), km, n_groups)
+    return p
+
+
+def _run_stack(blocks, cfg: ModelConfig, x, positions, *, pattern, mesh,
+               causal: bool, collect_cache: bool, collect_stages: bool = False):
+    """scan over a stacked group of sub-layers (full-sequence)."""
+
+    def group_fn(x, gp):
+        aux = jnp.zeros((), jnp.float32)
+        caches = {}
+        for i, kind in enumerate(pattern):
+            x, a, kv = _block_full(gp[f"sub{i}"], cfg, x, positions,
+                                   kind=kind, mesh=mesh, causal=causal)
+            aux = aux + a
+            if collect_cache:
+                caches[f"sub{i}"] = kv
+        return x, (aux, caches if collect_cache else 0)
+
+    group_fn = _maybe_remat(cfg, group_fn)
+
+    def body(carry, gp):
+        x, aux = carry
+        x, (a, caches) = group_fn(x, gp)
+        return (x, aux + a), (caches, x if collect_stages else 0)
+
+    (x, aux), (caches, stages) = _scan(
+        cfg, body, (x, jnp.zeros((), jnp.float32)), blocks)
+    return x, aux, caches, stages
+
+
+def _decode_stack(blocks, cfg: ModelConfig, x, pos, cache, *, pattern, mesh):
+    def body(x, inp):
+        gp, gc = inp
+        new_c = {}
+        for i in range(len(pattern)):
+            x, nc = _block_decode(gp[f"sub{i}"], cfg, x, pos, gc[f"sub{i}"],
+                                  kind=pattern[i], mesh=mesh)
+            new_c[f"sub{i}"] = nc
+        return x, new_c
+
+    x, new_cache = _scan(cfg, body, x, (blocks, cache))
+    return x, new_cache
+
+
+# ===========================================================================
+# public API
+# ===========================================================================
+
+def init_params(key, cfg: ModelConfig):
+    cfg.validate()
+    dtype = _dtype(cfg)
+    keys = jax.random.split(key, 8)
+    p: Dict[str, Any] = {
+        "embed": layers.embed_init(keys[0], (cfg.vocab_size, cfg.d_model), dtype),
+        "final_norm": layers.init_norm(cfg, cfg.d_model, dtype),
+    }
+    if not cfg.tie_embeddings:
+        p["lm_head"] = layers.dense_init(
+            keys[1], (cfg.d_model, cfg.vocab_size), 0, dtype)
+
+    at = cfg.arch_type
+    if at in ("dense", "moe", "vlm"):
+        p.update(_init_decoder_stacks(keys[2], cfg, dtype))
+        if cfg.n_mtp:
+            p["mtp"] = {
+                "proj": layers.dense_init(keys[3], (2 * cfg.d_model, cfg.d_model),
+                                          0, dtype),
+                "block": _init_block(keys[4], cfg, use_moe=False, dtype=dtype),
+                "norm": layers.init_norm(cfg, cfg.d_model, dtype),
+            }
+    elif at == "ssm":
+        p["blocks"] = _stacked_init(
+            lambda k: {"ln": layers.init_norm(cfg, cfg.d_model, dtype),
+                       "mixer": ssm.init_ssm(k, cfg, dtype)},
+            keys[2], cfg.n_layers)
+    elif at == "hybrid":
+        period = cfg.shared_attn_every
+        n_groups, tail = divmod(cfg.n_layers, period)
+
+        def mamba_block(k):
+            return {"ln": layers.init_norm(cfg, cfg.d_model, dtype),
+                    "mixer": ssm.init_ssm(k, cfg, dtype)}
+
+        p["mamba_groups"] = jax.vmap(lambda k: _stacked_init(mamba_block, k, period))(
+            jax.random.split(keys[2], n_groups))
+        if tail:
+            p["mamba_tail"] = _stacked_init(mamba_block, keys[3], tail)
+        # ONE shared attention block reused at the top of every group
+        p["shared_attn"] = _init_block(keys[4], cfg, use_moe=False, dtype=dtype)
+    elif at == "encdec":
+        def enc_block(k):
+            return _init_block(k, cfg, use_moe=False, dtype=dtype)
+
+        def dec_block(k):
+            ks = jax.random.split(k, 2)
+            b = _init_block(ks[0], cfg, use_moe=False, dtype=dtype)
+            b["ln_x"] = layers.init_norm(cfg, cfg.d_model, dtype)
+            b["xattn"] = layers.init_attention(ks[1], cfg, dtype)
+            return b
+
+        p["enc_blocks"] = _stacked_init(enc_block, keys[2], cfg.n_enc_layers)
+        p["enc_norm"] = layers.init_norm(cfg, cfg.d_model, dtype)
+        p["dec_blocks"] = _stacked_init(dec_block, keys[3], cfg.n_layers)
+    else:
+        raise ValueError(f"unknown arch_type {at}")
+    return p
+
+
+def _embed(params, cfg: ModelConfig, tokens):
+    x = params["embed"][tokens]
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.array(cfg.d_model, jnp.float32)).astype(x.dtype)
+    return x
+
+
+def _head(params, cfg: ModelConfig, h):
+    if cfg.tie_embeddings:
+        logits = h @ params["embed"].T
+    else:
+        logits = h @ params["lm_head"]
+    logits = logits.astype(jnp.float32)
+    if cfg.final_logit_softcap:
+        logits = layers._softcap(logits, cfg.final_logit_softcap)
+    return logits
+
+
+# ---------------------------------------------------------------------------
+# backbone (full sequence)
+# ---------------------------------------------------------------------------
+
+def backbone(params, cfg: ModelConfig, batch: Dict[str, Any], *, mesh=None,
+             collect_cache: bool = False, collect_stages: bool = False):
+    """Full-sequence forward.  Returns (hidden, aux_loss, caches, stages).
+
+    ``stages`` (when requested): (n_stages, B, S, D) per-group hidden
+    states — the representation stages consumed by the VAA distiller.
+    """
+    at = cfg.arch_type
+    caches: Dict[str, Any] = {}
+    stages = None
+
+    if at in ("dense", "moe"):
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        positions = jnp.arange(S)[None].repeat(B, 0)
+        x = shard_act(_embed(params, cfg, tokens), mesh)
+        aux = jnp.zeros((), jnp.float32)
+        if "dense_blocks" in params:
+            dense_cfg = cfg  # same attention; dense FFN chosen by params
+            x, a, c, _ = _run_stack(params["dense_blocks"], dense_cfg, x,
+                                    positions, pattern=("full",), mesh=mesh,
+                                    causal=True, collect_cache=collect_cache)
+            aux += a
+            caches["dense_blocks"] = c
+        x, a, c, stages = _run_stack(params["blocks"], cfg, x, positions,
+                                     pattern=cfg.attn_pattern, mesh=mesh,
+                                     causal=True, collect_cache=collect_cache,
+                                     collect_stages=collect_stages)
+        aux += a
+        caches["blocks"] = c
+        h = layers.apply_norm(params["final_norm"], x)
+        return h, aux, caches, stages
+
+    if at == "vlm":
+        tokens = batch["tokens"]
+        patches = batch["patches"]  # (B, P, D) precomputed (stub frontend)
+        B, S_txt = tokens.shape
+        x_txt = _embed(params, cfg, tokens)
+        x = jnp.concatenate([patches.astype(x_txt.dtype), x_txt], axis=1)
+        S = x.shape[1]
+        positions = jnp.arange(S)[None].repeat(B, 0)
+        x = shard_act(x, mesh)
+        x, aux, c, stages = _run_stack(params["blocks"], cfg, x, positions,
+                                       pattern=cfg.attn_pattern, mesh=mesh,
+                                       causal=True, collect_cache=collect_cache,
+                                       collect_stages=collect_stages)
+        caches["blocks"] = c
+        h = layers.apply_norm(params["final_norm"], x)
+        return h, aux, caches, stages  # caller slices off patch positions
+
+    if at == "ssm":
+        tokens = batch["tokens"]
+        x = shard_act(_embed(params, cfg, tokens), mesh)
+
+        def body(x, inp):
+            bp = inp
+            blk = _maybe_remat(cfg, lambda xx: xx + (
+                ssm.ssm_forward(bp["mixer"], cfg,
+                                layers.apply_norm(bp["ln"], xx))))
+            x = blk(x)
+            x = shard_act(x, mesh)
+            return x, (x if collect_stages else 0)
+
+        if collect_cache:
+            def body_c(x, bp):
+                out, c = ssm.ssm_forward(bp["mixer"], cfg,
+                                         layers.apply_norm(bp["ln"], x),
+                                         return_cache=True)
+                x = shard_act(x + out, mesh)
+                return x, (c, x if collect_stages else 0)
+            x, (c, stages) = _scan(cfg, body_c, x, params["blocks"])
+            caches["blocks"] = c
+        else:
+            x, stages = _scan(cfg, body, x, params["blocks"])
+        h = layers.apply_norm(params["final_norm"], x)
+        if not collect_stages:
+            stages = None
+        return h, jnp.zeros((), jnp.float32), caches, stages
+
+    if at == "hybrid":
+        return _hybrid_backbone(params, cfg, batch, mesh=mesh,
+                                collect_cache=collect_cache,
+                                collect_stages=collect_stages)
+
+    if at == "encdec":
+        return _encdec_backbone(params, cfg, batch, mesh=mesh,
+                                collect_cache=collect_cache,
+                                collect_stages=collect_stages)
+
+    raise ValueError(at)
+
+
+def _hybrid_backbone(params, cfg: ModelConfig, batch, *, mesh, collect_cache,
+                     collect_stages: bool = False):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    positions = jnp.arange(S)[None].repeat(B, 0)
+    x = shard_act(_embed(params, cfg, tokens), mesh)
+    caches: Dict[str, Any] = {"attn": [], "mamba": None, "tail": None}
+    shared = params["shared_attn"]
+
+    def mamba_scan(x, stack, collect):
+        if collect:
+            def body(x, bp):
+                out, c = ssm.ssm_forward(bp["mixer"], cfg,
+                                         layers.apply_norm(bp["ln"], x),
+                                         return_cache=True)
+                return x + out, c
+            return _scan(cfg, body, x, stack)
+        def body(x, bp):
+            # nested remat: the outer group checkpoint recomputes this
+            # forward during backward; the inner per-block checkpoint then
+            # bounds the live set to ONE block's intermediates (§Perf Z2)
+            fn = _maybe_remat(cfg, lambda xx: xx + ssm.ssm_forward(
+                bp["mixer"], cfg, layers.apply_norm(bp["ln"], xx)))
+            return fn(x), 0
+        return _scan(cfg, body, x, stack)
+
+    n_groups = jax.tree.leaves(params["mamba_groups"])[0].shape[0]
+
+    # GROUP-level remat: one residual checkpoint per (shared-attn + period
+    # mamba blocks) group — 13 saved boundaries instead of 78+attn for
+    # zamba2-7b; see EXPERIMENTS.md §Perf iteration Z1.
+    def group_fn(x, gp):
+        x, a, kv = _block_full(shared, cfg, x, positions, kind="full",
+                               mesh=mesh, causal=True)
+        x, mc = mamba_scan(x, gp, collect_cache)
+        return x, (kv if collect_cache else 0, mc)
+
+    if not collect_cache:
+        group_fn = _maybe_remat(cfg, group_fn)
+
+    def outer_body(x, gp):
+        x, (kv, mc) = group_fn(x, gp)
+        return x, (kv, mc, x if collect_stages else 0)
+
+    x, (kvs, mcs, stages) = _scan(cfg, outer_body, x, params["mamba_groups"])
+    if collect_cache:
+        caches["attn"] = kvs
+        caches["mamba"] = mcs
+    if "mamba_tail" in params:
+        x, a, kv = _block_full(shared, cfg, x, positions, kind="full",
+                               mesh=mesh, causal=True)
+        x, tc = mamba_scan(x, params["mamba_tail"], collect_cache)
+        if collect_cache:
+            caches["tail_attn"] = kv
+            caches["tail"] = tc
+    h = layers.apply_norm(params["final_norm"], x)
+    if not collect_stages:
+        stages = None
+    return h, jnp.zeros((), jnp.float32), caches, stages
+
+
+def _encdec_backbone(params, cfg: ModelConfig, batch, *, mesh, collect_cache,
+                     collect_stages: bool = False):
+    frames = batch["frames"]          # (B, T_a, D) stub audio embeddings
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    Ta = frames.shape[1]
+    # --- encoder (bidirectional) ---
+    enc_pos = jnp.arange(Ta)[None].repeat(B, 0)
+    xe = frames.astype(_dtype(cfg))
+    if cfg.pos_embedding == "sinusoidal":
+        xe = xe + layers.sinusoidal_positions(enc_pos, cfg.d_model).astype(xe.dtype)
+    xe = shard_act(xe, mesh)
+
+    def enc_body(x, bp):
+        fn = _maybe_remat(cfg, lambda xx: _block_full(
+            bp, cfg, xx, enc_pos, kind="full", mesh=mesh, causal=False)[0])
+        return fn(x), 0
+
+    xe, _ = _scan(cfg, enc_body, xe, params["enc_blocks"])
+    memory = layers.apply_norm(params["enc_norm"], xe)
+
+    # --- decoder ---
+    dec_pos = jnp.arange(S)[None].repeat(B, 0)
+    x = _embed(params, cfg, tokens)
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + layers.sinusoidal_positions(dec_pos, cfg.d_model).astype(x.dtype)
+    x = shard_act(x, mesh)
+
+    def dec_body(x, bp):
+        def fn(xx):
+            h = layers.apply_norm(bp["ln1"], xx)
+            a, kv = layers.attention_full(bp["attn"], cfg, h, dec_pos,
+                                          window=0, causal=True)
+            xx = xx + a
+            # cross attention
+            h = layers.apply_norm(bp["ln_x"], xx)
+            q, _, _ = layers.attention_qkv(bp["xattn"], cfg, h, dec_pos)
+            _, mk, mv = layers.attention_qkv(bp["xattn"], cfg, memory, enc_pos)
+            xa = layers.chunked_attention(
+                q, mk, mv, dec_pos, enc_pos, causal=False,
+                q_chunk=cfg.attn_chunk_q, k_chunk=cfg.attn_chunk_k,
+                unroll=cfg.scan_unroll)
+            xx = xx + xa.reshape(B, S, -1) @ bp["xattn"]["wo"]
+            h = layers.apply_norm(bp["ln2"], xx)
+            xx = xx + layers.apply_mlp(bp["mlp"], cfg, h)
+            return xx, {"self": kv, "cross": {"k": mk, "v": mv}}
+        if cfg.remat:
+            fn = jax.checkpoint(fn)
+        xx, c = fn(x)
+        return xx, (c if collect_cache else 0, xx if collect_stages else 0)
+
+    x, (dec_caches, stages) = _scan(cfg, dec_body, x, params["dec_blocks"])
+    h = layers.apply_norm(params["final_norm"], x)
+    caches = {}
+    if collect_cache:
+        caches = {"self": dec_caches["self"], "cross": dec_caches["cross"],
+                  "memory": memory}
+    if not collect_stages:
+        stages = None
+    return h, jnp.zeros((), jnp.float32), caches, stages
+
+
+# ---------------------------------------------------------------------------
+# losses
+# ---------------------------------------------------------------------------
+
+def chunked_ce(params, cfg: ModelConfig, h, labels, mask):
+    """Sequence-chunked CE: never materialises (B, S, V) logits at once.
+
+    Returns (sum_nll, sum_tokens, sum_correct) as f32 scalars.
+    """
+    B, S, D = h.shape
+    C = min(cfg.loss_chunk, S)
+    pad = (-S) % C
+    if pad:
+        h = jnp.pad(h, ((0, 0), (0, pad), (0, 0)))
+        labels = jnp.pad(labels, ((0, 0), (0, pad)))
+        mask = jnp.pad(mask, ((0, 0), (0, pad)))
+    n = h.shape[1] // C
+    hc = h.reshape(B, n, C, D).transpose(1, 0, 2, 3)
+    lc = labels.reshape(B, n, C).transpose(1, 0, 2)
+    mc = mask.reshape(B, n, C).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        nll_s, tok_s, cor_s = carry
+        hh, ll, mm = inp
+        if cfg.use_pallas:
+            from repro.kernels.kd_loss import ops as kd_ops
+            w = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+            nll, correct = kd_ops.ce_from_hidden(hh, w, ll,
+                                                 softcap=cfg.final_logit_softcap)
+        else:
+            logits = _head(params, cfg, hh)
+            lse = jax.nn.logsumexp(logits, axis=-1)
+            gold = jnp.take_along_axis(logits, ll[..., None], axis=-1)[..., 0]
+            nll = lse - gold
+            correct = (jnp.argmax(logits, -1) == ll).astype(jnp.float32)
+        mmf = mm.astype(jnp.float32)
+        return (nll_s + jnp.sum(nll * mmf), tok_s + jnp.sum(mmf),
+                cor_s + jnp.sum(correct * mmf)), 0
+
+    body = _maybe_remat(cfg, body) if cfg.remat else body
+    (nll, tok, cor), _ = _scan(
+        cfg, body, (jnp.zeros((), jnp.float32),) * 3, (hc, lc, mc))
+    return nll, tok, cor
+
+
+def loss_fn(params, cfg: ModelConfig, batch, *, mesh=None):
+    """Autoregressive LM loss (Eq. 2).  Returns (loss, metrics)."""
+    h, aux, _, _ = backbone(params, cfg, batch, mesh=mesh)
+    labels = batch["labels"]
+    mask = batch.get("mask", jnp.ones_like(labels, jnp.float32))
+    if cfg.arch_type == "vlm":  # drop patch positions
+        h = h[:, -labels.shape[1]:]
+    nll, tok, cor = chunked_ce(params, cfg, h, labels, mask)
+    loss = nll / jnp.maximum(tok, 1.0)
+    metrics = {"nll": nll, "tokens": tok, "accuracy": cor / jnp.maximum(tok, 1.0),
+               "aux_loss": aux, "ce_loss": loss}
+    if cfg.n_mtp and "mtp" in params:
+        mtp_loss = _mtp_loss(params, cfg, h, batch)
+        metrics["mtp_loss"] = mtp_loss
+        loss = loss + 0.3 * mtp_loss
+    return loss + aux, metrics
+
+
+def _mtp_loss(params, cfg: ModelConfig, h, batch):
+    """DeepSeek-V3 multi-token prediction head (depth 1): predict t+2."""
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    mp = params["mtp"]
+    # combine hidden at t with embedding of token t+1
+    emb_next = _embed(params, cfg, jnp.roll(tokens, -1, axis=1))
+    hin = jnp.concatenate([layers.apply_norm(mp["norm"], h),
+                           emb_next.astype(h.dtype)], axis=-1) @ mp["proj"]
+    positions = jnp.arange(S)[None].repeat(B, 0)
+    hout, _, _ = _block_full(mp["block"], cfg, hin, positions, kind="full",
+                             mesh=None)
+    labels2 = jnp.roll(labels, -1, axis=1)
+    mask = jnp.ones_like(labels2, jnp.float32).at[:, -2:].set(0.0)
+    nll, tok, _ = chunked_ce(params, cfg, hout, labels2, mask)
+    return nll / jnp.maximum(tok, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# serving: prefill + decode
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch, *, mesh=None):
+    """Runs the full prompt, returns (last_token_logits, cache)."""
+    h, _, caches, _ = backbone(params, cfg, batch, mesh=mesh,
+                               collect_cache=True)
+    logits = _head(params, cfg, h[:, -1:])[:, 0]
+    return logits, caches
+
+
+def init_decode_cache(cfg: ModelConfig, B: int, S: int):
+    """Zeroed cache pytree for ``decode_step`` (capacity S)."""
+    dtype = _dtype(cfg)
+    at = cfg.arch_type
+
+    def attn_entry():
+        return _attn_cache_struct(cfg, B, S, dtype)
+
+    def stack(entry, n):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), entry)
+
+    if at in ("dense", "moe", "vlm"):
+        lps = cfg.layers_per_scan
+        n_groups = (cfg.n_layers - cfg.first_dense_layers) // lps
+        c = {"blocks": stack({f"sub{i}": attn_entry() for i in range(lps)},
+                             n_groups)}
+        if cfg.first_dense_layers:
+            c["dense_blocks"] = stack({"sub0": attn_entry()},
+                                      cfg.first_dense_layers)
+        return c
+    if at == "ssm":
+        entry = {"state": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim,
+                                     cfg.ssm_state), jnp.float32),
+                 "conv": jnp.zeros((B, cfg.ssm_conv - 1,
+                                    cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
+                                   dtype)}
+        return {"blocks": stack(entry, cfg.n_layers)}
+    if at == "hybrid":
+        period = cfg.shared_attn_every
+        n_groups, tail = divmod(cfg.n_layers, period)
+        entry = {"state": jnp.zeros((B, cfg.ssm_heads, cfg.ssm_head_dim,
+                                     cfg.ssm_state), jnp.float32),
+                 "conv": jnp.zeros((B, cfg.ssm_conv - 1,
+                                    cfg.d_inner + 2 * cfg.ssm_groups * cfg.ssm_state),
+                                   dtype)}
+        c = {"mamba": stack(stack(entry, period), n_groups),
+             "attn": stack(attn_entry(), n_groups + (1 if tail else 0))}
+        if tail:
+            c["tail"] = stack(entry, tail)
+        return c
+    if at == "encdec":
+        self_entry = stack(attn_entry(), cfg.n_layers)
+        cross = stack(_attn_cache_struct(cfg, B, cfg.frontend_tokens, dtype),
+                      cfg.n_layers)
+        return {"self": self_entry, "cross": cross,
+                "memory": jnp.zeros((B, cfg.frontend_tokens, cfg.d_model), dtype)}
+    raise ValueError(at)
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, mesh=None):
+    """One serving step: tokens (B, 1) at positions pos (B,).
+
+    Returns (logits (B, V), new_cache).
+    """
+    at = cfg.arch_type
+    x = _embed(params, cfg, tokens)
+
+    if at in ("dense", "moe", "vlm"):
+        if "dense_blocks" in params:
+            x, c0 = _decode_stack(params["dense_blocks"], cfg, x, pos,
+                                  cache["dense_blocks"], pattern=("full",),
+                                  mesh=mesh)
+        x, c1 = _decode_stack(params["blocks"], cfg, x, pos, cache["blocks"],
+                              pattern=cfg.attn_pattern, mesh=mesh)
+        new_cache = {"blocks": c1}
+        if "dense_blocks" in params:
+            new_cache["dense_blocks"] = c0
+    elif at == "ssm":
+        def body(x, inp):
+            bp, bc = inp
+            out, nc = ssm.ssm_decode(bp["mixer"], cfg,
+                                     layers.apply_norm(bp["ln"], x), bc)
+            return x + out, nc
+        x, nc = _scan(cfg, body, x, (params["blocks"], cache["blocks"]))
+        new_cache = {"blocks": nc}
+    elif at == "hybrid":
+        x, new_cache = _hybrid_decode(params, cfg, x, pos, cache, mesh=mesh)
+    elif at == "encdec":
+        x, new_cache = _encdec_decode(params, cfg, x, pos, cache, mesh=mesh)
+    else:
+        raise ValueError(at)
+
+    h = layers.apply_norm(params["final_norm"], x)
+    return _head(params, cfg, h)[:, 0], new_cache
+
+
+def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh):
+    shared = params["shared_attn"]
+
+    def mamba_body(x, inp):
+        bp, bc = inp
+        out, nc = ssm.ssm_decode(bp["mixer"], cfg,
+                                 layers.apply_norm(bp["ln"], x), bc)
+        return x + out, nc
+
+    def group_body(x, inp):
+        gp, gc, ac = inp
+        x, nac = _block_decode(shared, cfg, x, pos, ac, kind="full", mesh=mesh)
+        x, ngc = _scan(cfg, mamba_body, x, (gp, gc))
+        return x, (ngc, nac)
+
+    n_groups = jax.tree.leaves(params["mamba_groups"])[0].shape[0]
+    has_tail = "mamba_tail" in params
+    attn_cache = cache["attn"]
+    attn_groups = jax.tree.map(lambda t: t[:n_groups], attn_cache)
+    x, (nmc, nac) = _scan(
+        cfg, group_body, x, (params["mamba_groups"], cache["mamba"], attn_groups))
+    new_cache = {"mamba": nmc}
+    if has_tail:
+        tail_attn = jax.tree.map(lambda t: t[n_groups], attn_cache)
+        x, nta = _block_decode(shared, cfg, x, pos, tail_attn, kind="full",
+                               mesh=mesh)
+        x, ntc = _scan(cfg, mamba_body, x, (params["mamba_tail"], cache["tail"]))
+        new_cache["tail"] = ntc
+        new_cache["attn"] = jax.tree.map(
+            lambda a, b: jnp.concatenate([a, b[None]], 0), nac, nta)
+    else:
+        new_cache["attn"] = nac
+    return x, new_cache
+
+
+def _encdec_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh):
+    B = x.shape[0]
+    if cfg.pos_embedding == "sinusoidal":
+        x = x + layers.sinusoidal_positions(pos[:, None], cfg.d_model).astype(x.dtype)
+
+    def body(x, inp):
+        bp, sc, cc = inp
+        h = layers.apply_norm(bp["ln1"], x)
+        a, (kc, vc) = layers.attention_decode(bp["attn"], cfg, h, pos,
+                                              sc["k"], sc["v"], window=0)
+        x = x + a
+        h = layers.apply_norm(bp["ln_x"], x)
+        q, _, _ = layers.attention_qkv(bp["xattn"], cfg, h, pos[:, None])
+        Ta = cc["k"].shape[1]
+        kpos = jnp.arange(Ta)[None].repeat(B, 0)
+        xa = layers.decode_attention(q, cc["k"], cc["v"], pos[:, None], kpos,
+                                     causal=False)
+        x = x + xa.reshape(B, 1, -1) @ bp["xattn"]["wo"]
+        h = layers.apply_norm(bp["ln2"], x)
+        x = x + layers.apply_mlp(bp["mlp"], cfg, h)
+        return x, {"k": kc, "v": vc}
+
+    x, nsc = _scan(cfg, body, x, (params["dec_blocks"], cache["self"],
+                                  cache["cross"]))
+    return x, {"self": nsc, "cross": cache["cross"], "memory": cache["memory"]}

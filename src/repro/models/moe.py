@@ -1,0 +1,322 @@
+"""Mixture-of-Experts FFN layer (routed + shared experts).
+
+Two execution paths:
+
+* ``dense`` — every expert computes every token, combined with routing
+  weights.  O(E) waste; used only for tiny CPU test configs (E <= 8).
+* ``a2a``  — TPU-native expert parallelism inside ``shard_map``: tokens
+  live on the "data" axis, experts are sharded over the "model" axis.
+  Each device packs its tokens into fixed-capacity per-expert buffers,
+  a ``lax.all_to_all`` over "model" moves them to the expert owners, a
+  batched (E_local, cap, D) x (E_local, D, F) einsum runs the expert
+  FFNs on the MXU, and the reverse all_to_all brings results home.
+  Capacity overflow drops tokens (GShard semantics, residual passes
+  through).  This is the mapping of the paper's DeepSpeed-MoE server
+  onto ICI collectives instead of NCCL.
+
+Experts whose count does not divide the "model" axis are padded with
+dummy experts whose router logits are masked to -inf.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models.config import ModelConfig
+from repro.models import layers
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    D = cfg.d_model
+    F = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_init(ks[0], (D, E), 0, jnp.float32),
+        "wi_gate": layers.dense_init(ks[1], (E, D, F), 1, dtype),
+        "wi_up": layers.dense_init(ks[2], (E, D, F), 1, dtype),
+        "wo": layers.dense_init(ks[3], (E, F, D), 1, dtype),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = layers.init_mlp(ks[4], cfg, D, F * cfg.n_shared_experts, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# routing
+# ---------------------------------------------------------------------------
+
+def route(p, cfg: ModelConfig, x):
+    """Returns (weights (T,k), expert_idx (T,k), aux_loss scalar).
+
+    x: (T, D) flat tokens.  Softmax-then-topk routing with the standard
+    load-balance auxiliary loss (GShard / Switch style).
+    """
+    logits = x.astype(jnp.float32) @ p["router"]  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, cfg.top_k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # aux load-balance loss: E * sum_e f_e * p_e
+    E = cfg.n_experts
+    me = jnp.mean(probs, axis=0)  # mean router prob per expert
+    one_hot = jax.nn.one_hot(idx, E, dtype=jnp.float32)  # (T,k,E)
+    fe = jnp.mean(jnp.sum(one_hot, axis=1), axis=0)  # fraction routed per expert
+    aux = E * jnp.sum(me * fe) * cfg.router_aux_coef
+    return w, idx, aux
+
+
+def _expert_ffn(cfg: ModelConfig, wg, wu, wo, x):
+    """Batched expert FFN: x (E, C, D), weights (E, D, F)/(E, F, D)."""
+    h = layers._act(cfg, jnp.einsum("ecd,edf->ecf", x, wg))
+    h = h * jnp.einsum("ecd,edf->ecf", x, wu)
+    return jnp.einsum("ecf,efd->ecd", h, wo)
+
+
+# ---------------------------------------------------------------------------
+# dense path (tests / tiny configs)
+# ---------------------------------------------------------------------------
+
+def moe_dense(p, cfg: ModelConfig, x):
+    """x: (B, S, D).  Computes all experts on all tokens (small E only)."""
+    B, S, D = x.shape
+    xt = x.reshape(-1, D)
+    w, idx, aux = route(p, cfg, xt)
+    if cfg.use_pallas:
+        from repro.kernels.moe_gemm import ops as moe_ops
+        out = moe_ops.moe_ffn(xt, w, idx, p["wi_gate"], p["wi_up"], p["wo"],
+                              act=cfg.act)
+    else:
+        # (E, T, D) all-experts compute
+        h = jnp.einsum("td,edf->etf", xt, p["wi_gate"])
+        h = layers._act(cfg, h) * jnp.einsum("td,edf->etf", xt, p["wi_up"])
+        y_all = jnp.einsum("etf,efd->etd", h, p["wo"])  # (E, T, D)
+        one_hot = jax.nn.one_hot(idx, cfg.n_experts, dtype=xt.dtype)  # (T,k,E)
+        comb = jnp.einsum("tk,tke->te", w.astype(xt.dtype), one_hot)
+        out = jnp.einsum("te,etd->td", comb, y_all)
+    out = out.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        out = out + layers.apply_mlp(p["shared"], cfg, x)
+    return out, aux
+
+
+# ---------------------------------------------------------------------------
+# all-to-all expert-parallel path (shard_map over the "model" axis)
+# ---------------------------------------------------------------------------
+
+def _pad_experts(E: int, ep: int) -> int:
+    return -(-E // ep) * ep
+
+
+def _a2a_local(xt, w, idx, wg, wu, wo, *, cfg: ModelConfig, ep_axis: str,
+               ep_size: int, capacity: int):
+    """Per-device body under shard_map.
+
+    xt:  (T_loc, D) local tokens            [sharded over "data"]
+    idx: (T_loc, k) global expert ids       [local]
+    wg/wu/wo: (E_loc, D, F) local expert weights [sharded over "model"]
+    """
+    T, D = xt.shape
+    k = idx.shape[1]
+    E_loc = wg.shape[0]
+    E_pad = E_loc * ep_size
+    cap = capacity
+
+    # --- pack: per (destination device, local slot) --------------------
+    flat_e = idx.reshape(-1)                     # (T*k,) global expert id
+    flat_w = w.reshape(-1)
+    flat_tok = jnp.arange(T * k, dtype=jnp.int32) // k
+    dest = flat_e // E_loc                       # owning device on "model"
+    # position of each assignment within its expert's capacity buffer
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    # rank within equal expert ids
+    pos_in_e = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e, side="left")
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_in_e.astype(jnp.int32))
+    keep = pos < cap
+    # buffer layout: (ep_size, E_loc, cap, D)
+    slot = (flat_e % E_loc) * cap + pos          # slot within destination
+    buf = jnp.zeros((ep_size, E_loc * cap, D), xt.dtype)
+    buf = buf.at[dest, jnp.where(keep, slot, 0)].add(
+        jnp.where(keep, 1.0, 0.0)[:, None].astype(xt.dtype) * xt[flat_tok])
+
+    # --- all_to_all: send token buffers to expert owners ----------------
+    recv = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0,
+                              tiled=False)       # (ep_size, E_loc*cap, D)
+    recv = recv.reshape(ep_size, E_loc, cap, D).transpose(1, 0, 2, 3)
+    recv = recv.reshape(E_loc, ep_size * cap, D)
+
+    # --- expert compute (batched MXU einsum) ----------------------------
+    if cfg.use_pallas:
+        from repro.kernels.moe_gemm import ops as moe_ops
+        y = moe_ops.grouped_ffn(recv, wg, wu, wo, act=cfg.act)
+    else:
+        y = _expert_ffn(cfg, wg, wu, wo, recv)   # (E_loc, ep*cap, D)
+
+    # --- reverse all_to_all ---------------------------------------------
+    y = y.reshape(E_loc, ep_size, cap, D).transpose(1, 0, 2, 3)
+    y = y.reshape(ep_size, E_loc * cap, D)
+    back = jax.lax.all_to_all(y, ep_axis, split_axis=0, concat_axis=0,
+                              tiled=False)       # (ep_size, E_loc*cap, D)
+
+    # --- unpack + weighted combine ---------------------------------------
+    gathered = back[dest, jnp.where(keep, slot, 0)]   # (T*k, D)
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    out = jnp.zeros((T, D), xt.dtype).at[flat_tok].add(
+        gathered * flat_w[:, None].astype(xt.dtype))
+    return out
+
+
+def moe_a2a(p, cfg: ModelConfig, x, mesh, *, data_axes=("data",),
+            ep_axis: str = "model"):
+    """x: (B, S, D) with batch sharded over `data_axes`."""
+    from jax.experimental.shard_map import shard_map
+
+    B, S, D = x.shape
+    E = cfg.n_experts
+    ep_size = mesh.shape[ep_axis]
+    E_pad = _pad_experts(E, ep_size)
+    E_loc = E_pad // ep_size
+
+    xt = x.reshape(-1, D)
+    w, idx, aux = route(p, cfg, xt)
+
+    # static per-device capacity: tokens_per_device * k * cf / E_pad
+    n_data = 1
+    for a in data_axes:
+        n_data *= mesh.shape[a]
+    if (B * S) % n_data != 0:
+        # tiny decode batches (e.g. long_500k, B*S=1) replicate tokens;
+        # the a2a round-trip still lands every token on its expert owner.
+        data_axes, n_data = (), 1
+    t_loc = max((B * S) // n_data, 1)
+    cap = max(int(math.ceil(t_loc * cfg.top_k * cfg.capacity_factor / E_pad)), 4)
+    # MXU-align the capacity buffer
+    cap = -(-cap // 8) * 8
+
+    wg, wu, wo = p["wi_gate"], p["wi_up"], p["wo"]
+    if E_pad != E:
+        padn = E_pad - E
+        wg = jnp.pad(wg, ((0, padn), (0, 0), (0, 0)))
+        wu = jnp.pad(wu, ((0, padn), (0, 0), (0, 0)))
+        wo = jnp.pad(wo, ((0, padn), (0, 0), (0, 0)))
+
+    if not data_axes:
+        dspec = P(None)
+    elif len(data_axes) > 1:
+        dspec = P(data_axes)
+    else:
+        dspec = P(data_axes[0])
+    body = functools.partial(_a2a_local, cfg=cfg, ep_axis=ep_axis,
+                             ep_size=ep_size, capacity=cap)
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(dspec, dspec, dspec, P(ep_axis), P(ep_axis), P(ep_axis)),
+        out_specs=dspec,
+        check_rep=False,
+    )(xt, w, idx, wg, wu, wo)
+
+    out = out.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        out = out + layers.apply_mlp(p["shared"], cfg, x)
+    return out, aux
+
+
+def _replicated_ep_local(xt, w, idx, wg, wu, wo, *, cfg: ModelConfig,
+                         axes, capacity: int):
+    """Serving-layout expert parallelism: tokens REPLICATED on every
+    device, experts sharded 1-per-device across ALL mesh axes, outputs
+    combined with one small psum.  No weight collectives at all — the
+    layout that makes 671B-class MoE decode ICI-cheap (EXPERIMENTS.md
+    §Perf, iteration D2)."""
+    T, D = xt.shape
+    k = idx.shape[1]
+    E_loc = wg.shape[0]
+    cap = capacity
+    dev = jax.lax.axis_index(axes)
+
+    flat_e = idx.reshape(-1)
+    flat_w = w.reshape(-1)
+    flat_tok = jnp.arange(T * k, dtype=jnp.int32) // k
+    # rank of each assignment within its expert (capacity accounting)
+    order = jnp.argsort(flat_e, stable=True)
+    sorted_e = flat_e[order]
+    pos_in_e = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e, "left")
+    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_in_e.astype(jnp.int32))
+    local = (flat_e // E_loc) == dev
+    keep = local & (pos < cap)
+    loc_e = jnp.where(local, flat_e % E_loc, 0)
+    slot = jnp.where(keep, pos, 0)
+    buf = jnp.zeros((E_loc, cap, D), xt.dtype)
+    buf = buf.at[loc_e, slot].add(
+        jnp.where(keep, 1.0, 0.0)[:, None].astype(xt.dtype) * xt[flat_tok])
+    if cfg.use_pallas:
+        from repro.kernels.moe_gemm import ops as moe_ops
+        y = moe_ops.grouped_ffn(buf, wg, wu, wo, act=cfg.act)
+    else:
+        y = _expert_ffn(cfg, wg, wu, wo, buf)
+    gathered = y[loc_e, slot]
+    gathered = jnp.where(keep[:, None], gathered, 0.0)
+    out = jnp.zeros((T, D), xt.dtype).at[flat_tok].add(
+        gathered * flat_w[:, None].astype(xt.dtype))
+    return jax.lax.psum(out, axes)
+
+
+def moe_replicated_ep(p, cfg: ModelConfig, x, mesh):
+    """Decode-path MoE: see _replicated_ep_local."""
+    from jax.experimental.shard_map import shard_map
+
+    B, S, D = x.shape
+    E = cfg.n_experts
+    n_dev = mesh.size
+    axes = tuple(mesh.axis_names)
+    E_pad = _pad_experts(E, n_dev)
+    E_loc = E_pad // n_dev
+
+    xt = x.reshape(-1, D)
+    w, idx, aux = route(p, cfg, xt)
+    T = xt.shape[0]
+    cap = max(int(math.ceil(T * cfg.top_k * cfg.capacity_factor / E_pad)), 4)
+    cap = min(-(-cap // 4) * 4, max(T, 4))
+
+    wg, wu, wo = p["wi_gate"], p["wi_up"], p["wo"]
+    if E_pad != E:
+        padn = E_pad - E
+        wg = jnp.pad(wg, ((0, padn), (0, 0), (0, 0)))
+        wu = jnp.pad(wu, ((0, padn), (0, 0), (0, 0)))
+        wo = jnp.pad(wo, ((0, padn), (0, 0), (0, 0)))
+
+    body = functools.partial(_replicated_ep_local, cfg=cfg, axes=axes,
+                             capacity=cap)
+    espec = P(axes)
+    out = shard_map(
+        body, mesh=mesh,
+        in_specs=(P(None), P(None), P(None), espec, espec, espec),
+        out_specs=P(None),
+        check_rep=False,
+    )(xt, w, idx, wg, wu, wo)
+    out = out.reshape(B, S, D)
+    if cfg.n_shared_experts:
+        out = out + layers.apply_mlp(p["shared"], cfg, x)
+    return out, aux
+
+
+def apply_moe(p, cfg: ModelConfig, x, mesh=None):
+    impl = cfg.moe_impl
+    if impl == "auto":
+        impl = "a2a" if (mesh is not None and "model" in mesh.axis_names
+                         and mesh.size > 1) else "dense"
+    if impl == "replicated_ep":
+        return moe_replicated_ep(p, cfg, x, mesh)
+    if impl == "a2a":
+        data_axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return moe_a2a(p, cfg, x, mesh, data_axes=data_axes)
+    return moe_dense(p, cfg, x)

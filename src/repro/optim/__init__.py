@@ -1,0 +1,5 @@
+from repro.optim.adamw import adamw_init, adamw_update, global_norm_clip
+from repro.optim.schedule import cosine_schedule, linear_schedule, constant_schedule
+
+__all__ = ["adamw_init", "adamw_update", "global_norm_clip",
+           "cosine_schedule", "linear_schedule", "constant_schedule"]

@@ -1,0 +1,87 @@
+"""AdamW in pure JAX, with parameter-freezing masks.
+
+The freeze mask is central to the paper's Phase III (global MoE tuning):
+the FFN experts — the overwhelming majority of parameters — stay frozen
+while gate / embedding / attention / output layers train (DeepFusion
+§IV.D).  Frozen leaves carry **scalar** zero moments, so the optimizer
+state for a frozen 671B-expert bank is a few bytes, mirroring the paper's
+"reduced memory footprint" claim.
+
+``state_dtype`` lets big configs keep moments in bf16 (HBM-bound 671B
+training; see EXPERIMENTS.md §Dry-run).
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _is_frozen(mask_leaf) -> bool:
+    return mask_leaf is False
+
+
+def adamw_init(params, *, freeze_mask=None, state_dtype=None):
+    """freeze_mask: pytree of bools matching params (True = trainable)."""
+    if freeze_mask is None:
+        freeze_mask = jax.tree.map(lambda _: True, params)
+
+    def mom(p, trainable):
+        dt = state_dtype or jnp.float32
+        if not trainable:
+            return jnp.zeros((), dt)
+        return jnp.zeros(p.shape, dt)
+
+    return {
+        "m": jax.tree.map(mom, params, freeze_mask),
+        "v": jax.tree.map(mom, params, freeze_mask),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm_clip(grads, max_norm: float):
+    leaves = [jnp.sum(jnp.square(g.astype(jnp.float32)))
+              for g in jax.tree.leaves(grads)]
+    gnorm = jnp.sqrt(sum(leaves))
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(gnorm, 1e-9))
+    return jax.tree.map(lambda g: (g * scale).astype(g.dtype), grads), gnorm
+
+
+def adamw_update(grads, state, params, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8,
+                 weight_decay: float = 0.0, freeze_mask=None,
+                 clip_norm: float = 1.0):
+    """One AdamW step.  Returns (new_params, new_state, stats)."""
+    if freeze_mask is None:
+        freeze_mask = jax.tree.map(lambda _: True, params)
+    step = state["step"] + 1
+    if clip_norm:
+        grads, gnorm = global_norm_clip(grads, clip_norm)
+    else:
+        gnorm = jnp.zeros((), jnp.float32)
+    c1 = 1.0 - b1 ** step.astype(jnp.float32)
+    c2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v, trainable):
+        if not trainable:
+            return p, m, v
+        gf = g.astype(jnp.float32)
+        m_new = b1 * m.astype(jnp.float32) + (1 - b1) * gf
+        v_new = b2 * v.astype(jnp.float32) + (1 - b2) * jnp.square(gf)
+        mhat = m_new / c1
+        vhat = v_new / c2
+        delta = mhat / (jnp.sqrt(vhat) + eps)
+        if weight_decay:
+            delta = delta + weight_decay * p.astype(jnp.float32)
+        p_new = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+        return p_new, m_new.astype(m.dtype), v_new.astype(v.dtype)
+
+    out = jax.tree.map(upd, params, grads, state["m"], state["v"], freeze_mask)
+    # unzip the 3-tuples
+    treedef = jax.tree.structure(params)
+    flat = treedef.flatten_up_to(out)
+    new_params = treedef.unflatten([t[0] for t in flat])
+    new_m = treedef.unflatten([t[1] for t in flat])
+    new_v = treedef.unflatten([t[2] for t in flat])
+    return new_params, {"m": new_m, "v": new_v, "step": step}, {"grad_norm": gnorm}

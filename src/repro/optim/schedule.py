@@ -1,0 +1,28 @@
+"""Learning-rate schedules (pure functions of the step)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant_schedule(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def linear_schedule(lr: float, total_steps: int, warmup: int = 0):
+    def f(step):
+        s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+        warm = jnp.minimum(s / max(warmup, 1), 1.0) if warmup else 1.0
+        decay = jnp.maximum(1.0 - s / max(total_steps, 1), 0.0)
+        return jnp.asarray(lr, jnp.float32) * warm * decay
+    return f
+
+
+def cosine_schedule(lr: float, total_steps: int, warmup: int = 0,
+                    min_ratio: float = 0.1):
+    def f(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = jnp.where(s < warmup, s / max(warmup, 1), 1.0)
+        prog = jnp.clip((s - warmup) / max(total_steps - warmup, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.asarray(lr, jnp.float32) * warm * cos
+    return f

@@ -1,0 +1,11 @@
+from repro.sharding.rules import (
+    param_specs,
+    opt_state_specs,
+    batch_spec,
+    cache_specs,
+    named,
+    data_axes_of,
+)
+
+__all__ = ["param_specs", "opt_state_specs", "batch_spec", "cache_specs",
+           "named", "data_axes_of"]

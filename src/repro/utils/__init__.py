@@ -1,0 +1,21 @@
+from repro.utils.pytree import (
+    tree_size,
+    tree_bytes,
+    tree_average,
+    tree_zeros_like,
+    tree_cast,
+    tree_norm,
+    flatten_with_paths,
+    path_str,
+)
+
+__all__ = [
+    "tree_size",
+    "tree_bytes",
+    "tree_average",
+    "tree_zeros_like",
+    "tree_cast",
+    "tree_norm",
+    "flatten_with_paths",
+    "path_str",
+]

@@ -1,0 +1,233 @@
+"""Per-kernel correctness sweeps: Pallas (interpret=True) vs ref.py oracles.
+
+Shapes and dtypes are swept; every kernel must match its pure-jnp oracle
+to tight tolerances.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.moe_gemm.ops import grouped_ffn, moe_ffn
+from repro.kernels.moe_gemm.ref import grouped_ffn_ref, moe_ffn_ref
+from repro.kernels.ssd_scan.ops import ssd
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.kd_loss.ops import ce_from_hidden, ce_kl_from_hidden
+from repro.kernels.kd_loss.ref import ce_ref, ce_kl_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KH,D", [
+    (2, 64, 64, 4, 2, 32),
+    (1, 128, 128, 2, 2, 64),
+    (2, 33, 65, 3, 1, 16),
+    (1, 256, 256, 8, 4, 8),
+])
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, 0, 0.0), (True, 24, 0.0), (True, 0, 50.0), (False, 0, 0.0),
+])
+def test_flash_attention_matches_ref(B, Sq, Sk, H, KH, D, causal, window,
+                                     softcap):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, D))
+    k = jax.random.normal(ks[1], (B, Sk, KH, D))
+    v = jax.random.normal(ks[2], (B, Sk, KH, D))
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          softcap=softcap, block_q=32, block_k=32)
+    kr = jnp.repeat(k, H // KH, 2)
+    vr = jnp.repeat(v, H // KH, 2)
+    ref = attention_ref(
+        q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D),
+        kr.transpose(0, 2, 1, 3).reshape(B * H, Sk, D),
+        vr.transpose(0, 2, 1, 3).reshape(B * H, Sk, D),
+        causal=causal, window=window, softcap=softcap,
+    ).reshape(B, H, Sq, D).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_dtypes(dtype):
+    B, S, H, D = 1, 64, 2, 32
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, S, H, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, S, H, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, S, H, D)).astype(dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32)
+    ref = attention_ref(q.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+                        k.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+                        v.transpose(0, 2, 1, 3).reshape(B * H, S, D),
+                        causal=True).reshape(B, H, S, D).transpose(0, 2, 1, 3)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# moe grouped FFN
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("E,C,D,F", [(4, 48, 32, 64), (2, 16, 16, 40),
+                                     (8, 8, 64, 32)])
+@pytest.mark.parametrize("act", ["silu", "gelu"])
+def test_grouped_ffn_matches_ref(E, C, D, F, act):
+    ks = jax.random.split(KEY, 4)
+    x = jax.random.normal(ks[0], (E, C, D))
+    wg = jax.random.normal(ks[1], (E, D, F)) * 0.1
+    wu = jax.random.normal(ks[2], (E, D, F)) * 0.1
+    wo = jax.random.normal(ks[3], (E, F, D)) * 0.1
+    out = grouped_ffn(x, wg, wu, wo, act=act, block_c=16, block_f=16)
+    ref = grouped_ffn_ref(x, wg, wu, wo, act=act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("T,D,F,E,k", [(40, 24, 32, 4, 2), (17, 16, 16, 3, 1)])
+def test_routed_moe_matches_ref(T, D, F, E, k):
+    ks = jax.random.split(KEY, 6)
+    xt = jax.random.normal(ks[0], (T, D))
+    logits = jax.random.normal(ks[1], (T, E))
+    w, idx = jax.lax.top_k(jax.nn.softmax(logits), k)
+    w = w / w.sum(-1, keepdims=True)
+    wg = jax.random.normal(ks[2], (E, D, F)) * 0.1
+    wu = jax.random.normal(ks[3], (E, D, F)) * 0.1
+    wo = jax.random.normal(ks[4], (E, F, D)) * 0.1
+    out = moe_ffn(xt, w, idx, wg, wu, wo)
+    ref = moe_ffn_ref(xt, w, idx, wg, wu, wo)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# SSD scan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,S,H,P,N,chunk", [
+    (2, 100, 3, 8, 16, 32),
+    (1, 64, 2, 16, 8, 16),
+    (1, 37, 1, 8, 8, 64),   # S < chunk, odd length
+])
+def test_ssd_kernel_matches_sequential_ref(B, S, H, P, N, chunk):
+    ks = jax.random.split(KEY, 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bh = jax.random.normal(ks[3], (B, S, H, N)) * 0.3
+    Ch = jax.random.normal(ks[4], (B, S, H, N)) * 0.3
+    y_k, h_k = ssd(xh, dt, A, Bh, Ch, chunk=chunk)
+    xb = xh.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    y_r, h_r = ssd_ref(xb, dt.transpose(0, 2, 1).reshape(B * H, S),
+                       jnp.tile(A, B),
+                       Bh.transpose(0, 2, 1, 3).reshape(B * H, S, N),
+                       Ch.transpose(0, 2, 1, 3).reshape(B * H, S, N))
+    y_r = y_r.reshape(B, H, S, P).transpose(0, 2, 1, 3)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h_k.reshape(B * H, P, N)),
+                               np.asarray(h_r), rtol=2e-4, atol=2e-4)
+
+
+def test_ssd_kernel_carries_initial_state():
+    B, S, H, P, N = 1, 32, 2, 8, 8
+    ks = jax.random.split(KEY, 6)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bh = jax.random.normal(ks[3], (B, S, H, N)) * 0.3
+    Ch = jax.random.normal(ks[4], (B, S, H, N)) * 0.3
+    h0 = jax.random.normal(ks[5], (B, H, P, N)) * 0.5
+    y1, hf1 = ssd(xh, dt, A, Bh, Ch, chunk=8, init_state=h0)
+    xb = xh.transpose(0, 2, 1, 3).reshape(B * H, S, P)
+    y2, hf2 = ssd_ref(xb, dt.transpose(0, 2, 1).reshape(B * H, S),
+                      jnp.tile(A, B),
+                      Bh.transpose(0, 2, 1, 3).reshape(B * H, S, N),
+                      Ch.transpose(0, 2, 1, 3).reshape(B * H, S, N),
+                      h0=h0.reshape(B * H, P, N))
+    np.testing.assert_allclose(
+        np.asarray(y1),
+        np.asarray(y2.reshape(B, H, S, P).transpose(0, 2, 1, 3)),
+        rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fused KD loss
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T,Ds,Dt,V,tau,caps,capt,bv", [
+    (24, 16, 12, 100, 2.0, 0.0, 0.0, 32),
+    (50, 8, 8, 333, 1.0, 30.0, 30.0, 64),
+    (16, 32, 16, 64, 4.0, 0.0, 50.0, 16),
+])
+def test_kd_loss_forward_and_grads(T, Ds, Dt, V, tau, caps, capt, bv):
+    ks = jax.random.split(KEY, 5)
+    hs = jax.random.normal(ks[0], (T, Ds))
+    ws = jax.random.normal(ks[1], (Ds, V)) * 0.3
+    ht = jax.random.normal(ks[2], (T, Dt))
+    wt = jax.random.normal(ks[3], (Dt, V)) * 0.3
+    lab = jax.random.randint(ks[4], (T,), 0, V)
+    ce, kl, cor = ce_kl_from_hidden(hs, ws, ht, wt, lab, tau=tau,
+                                    softcap_s=caps, softcap_t=capt,
+                                    block_v=bv)
+    ce_r, kl_r, cor_r = ce_kl_ref(hs, ws, ht, wt, lab, tau=tau,
+                                  softcap_s=caps, softcap_t=capt)
+    np.testing.assert_allclose(np.asarray(ce), np.asarray(ce_r),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(kl), np.asarray(kl_r),
+                               rtol=1e-4, atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(cor), np.asarray(cor_r))
+
+    def loss_k(hs, ws):
+        ce, kl, _ = ce_kl_from_hidden(hs, ws, ht, wt, lab, tau=tau,
+                                      softcap_s=caps, softcap_t=capt,
+                                      block_v=bv)
+        return jnp.mean(ce) + 0.7 * jnp.mean(kl)
+
+    def loss_r(hs, ws):
+        ce, kl, _ = ce_kl_ref(hs, ws, ht, wt, lab, tau=tau,
+                              softcap_s=caps, softcap_t=capt)
+        return jnp.mean(ce) + 0.7 * jnp.mean(kl)
+
+    gk = jax.grad(loss_k, argnums=(0, 1))(hs, ws)
+    gr = jax.grad(loss_r, argnums=(0, 1))(hs, ws)
+    for a, b in zip(gk, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                                   rtol=1e-4, atol=1e-5)
+
+
+def test_ce_only_path():
+    T, D, V = 30, 12, 77
+    ks = jax.random.split(KEY, 3)
+    hs = jax.random.normal(ks[0], (T, D))
+    ws = jax.random.normal(ks[1], (D, V)) * 0.3
+    lab = jax.random.randint(ks[2], (T,), 0, V)
+    ce, cor = ce_from_hidden(hs, ws, lab, block_v=16)
+    ce_r, cor_r = ce_ref(hs, ws, lab)
+    np.testing.assert_allclose(np.asarray(ce), np.asarray(ce_r),
+                               rtol=1e-5, atol=1e-5)
+    g1 = jax.grad(lambda h: jnp.sum(
+        ce_from_hidden(h, ws, lab, block_v=16)[0]))(hs)
+    g2 = jax.grad(lambda h: jnp.sum(ce_ref(h, ws, lab)[0]))(hs)
+    np.testing.assert_allclose(np.asarray(g1), np.asarray(g2),
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_model_layer_uses_pallas_consistently():
+    """cfg.use_pallas=True must agree with the XLA path end-to-end."""
+    from repro.configs import get_config
+    from repro.models import model as M
+    cfg = get_config("mamba2-1.3b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(7), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(8), (2, 32), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, 1)}
+    l1, _ = M.loss_fn(params, cfg, batch)
+    l2, _ = M.loss_fn(params, cfg.replace(use_pallas=True), batch)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)

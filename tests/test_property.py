@@ -1,0 +1,215 @@
+"""Property-based tests (hypothesis) on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import clustering
+from repro.kernels.kd_loss.ref import ce_ref
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.models import layers
+from repro.models.ssm import ssd_chunked
+from repro.optim import adamw_init, adamw_update
+from repro.utils.pytree import tree_average
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# pytree / proxy averaging
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(1, 5), seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_tree_average_of_identical_trees_is_identity(n, seed):
+    key = jax.random.PRNGKey(seed)
+    tree = {"a": jax.random.normal(key, (3, 4)),
+            "b": {"c": jax.random.normal(key, (5,))}}
+    avg = tree_average([tree] * n)
+    for a, b in zip(jax.tree.leaves(avg), jax.tree.leaves(tree)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-6)
+
+
+@given(seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_tree_average_is_permutation_invariant(seed):
+    keys = jax.random.split(jax.random.PRNGKey(seed), 3)
+    trees = [{"w": jax.random.normal(k, (4, 4))} for k in keys]
+    a = tree_average(trees)
+    b = tree_average(trees[::-1])
+    # float summation order differs -> ULP-level tolerance
+    np.testing.assert_allclose(np.asarray(a["w"]), np.asarray(b["w"]),
+                               rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# clustering
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(4, 20), k=st.integers(1, 5), seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_kmeans_labels_valid_and_total(n, k, seed):
+    rng = np.random.default_rng(seed)
+    e = rng.standard_normal((n, 8)).astype(np.float32)
+    labels, cents = clustering.spherical_kmeans(e, k, seed=seed)
+    assert labels.shape == (n,)
+    assert labels.min() >= 0 and labels.max() < min(k, n)
+
+
+@given(seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_kmeans_scale_invariance(seed):
+    """Cosine k-means must ignore embedding magnitudes."""
+    rng = np.random.default_rng(seed)
+    e = rng.standard_normal((10, 6)).astype(np.float32)
+    scales = rng.uniform(0.1, 10.0, size=(10, 1)).astype(np.float32)
+    l1, _ = clustering.spherical_kmeans(e, 3, seed=0)
+    l2, _ = clustering.spherical_kmeans(e * scales, 3, seed=0)
+    np.testing.assert_array_equal(l1, l2)
+
+
+# ---------------------------------------------------------------------------
+# attention invariants
+# ---------------------------------------------------------------------------
+
+@given(sq=st.integers(4, 40), dk=st.sampled_from([8, 16]),
+       qc=st.sampled_from([4, 8, 16]), seed=st.integers(0, 30))
+@settings(**SETTINGS)
+def test_chunked_attention_chunk_size_invariance(sq, dk, qc, seed):
+    """Online-softmax result must not depend on the chunking."""
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 3)
+    B, H = 1, 2
+    q = jax.random.normal(ks[0], (B, sq, H, dk))
+    k = jax.random.normal(ks[1], (B, sq, H, dk))
+    v = jax.random.normal(ks[2], (B, sq, H, dk))
+    pos = jnp.arange(sq)[None]
+    a = layers.chunked_attention(q, k, v, pos, pos, causal=True,
+                                 q_chunk=qc, k_chunk=qc)
+    b = layers.chunked_attention(q, k, v, pos, pos, causal=True,
+                                 q_chunk=sq, k_chunk=sq)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b),
+                               rtol=2e-4, atol=2e-4)
+
+
+@given(sq=st.integers(4, 24), seed=st.integers(0, 30))
+@settings(**SETTINGS)
+def test_attention_rows_are_convex_combinations(sq, seed):
+    """Causal attention output lies in the convex hull of V rows."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (1, sq, 1, 8))
+    k = jax.random.normal(ks[1], (1, sq, 1, 8))
+    v = jax.random.normal(ks[2], (1, sq, 1, 8))
+    pos = jnp.arange(sq)[None]
+    out = layers.chunked_attention(q, k, v, pos, pos, causal=True,
+                                   q_chunk=8, k_chunk=8)
+    vmin = jnp.min(v, axis=1, keepdims=True)
+    vmax = jnp.max(v, axis=1, keepdims=True)
+    assert bool(jnp.all(out >= vmin - 1e-4))
+    assert bool(jnp.all(out <= vmax + 1e-4))
+
+
+@given(seed=st.integers(0, 30), cap=st.sampled_from([5.0, 30.0]))
+@settings(**SETTINGS)
+def test_softcap_bounds_scores(seed, cap):
+    s = jax.random.normal(jax.random.PRNGKey(seed), (16,)) * 100
+    c = layers._softcap(s, cap)
+    assert bool(jnp.all(jnp.abs(c) <= cap + 1e-5))
+
+
+# ---------------------------------------------------------------------------
+# SSD invariants
+# ---------------------------------------------------------------------------
+
+@given(s=st.integers(8, 50), chunk=st.sampled_from([4, 8, 16]),
+       seed=st.integers(0, 30))
+@settings(**SETTINGS)
+def test_ssd_chunk_size_invariance(s, chunk, seed):
+    B, H, P, N = 1, 2, 4, 8
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    xh = jax.random.normal(ks[0], (B, s, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, s, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bh = jax.random.normal(ks[3], (B, s, H, N)) * 0.3
+    Ch = jax.random.normal(ks[4], (B, s, H, N)) * 0.3
+    y1, h1 = ssd_chunked(xh, dt, A, Bh, Ch, chunk=chunk)
+    y2, h2 = ssd_chunked(xh, dt, A, Bh, Ch, chunk=s)
+    np.testing.assert_allclose(np.asarray(y1), np.asarray(y2),
+                               rtol=3e-4, atol=3e-4)
+    np.testing.assert_allclose(np.asarray(h1), np.asarray(h2),
+                               rtol=3e-4, atol=3e-4)
+
+
+@given(s1=st.integers(4, 20), s2=st.integers(4, 20), seed=st.integers(0, 30))
+@settings(**SETTINGS)
+def test_ssd_state_chaining_matches_joint_scan(s1, s2, seed):
+    """Running [0:s1] then [s1:s1+s2] with the carried state == one pass.
+    This is the prefill->decode cache-consistency invariant."""
+    B, H, P, N = 1, 1, 4, 4
+    S = s1 + s2
+    ks = jax.random.split(jax.random.PRNGKey(seed), 5)
+    xh = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.3)
+    Bh = jax.random.normal(ks[3], (B, S, H, N)) * 0.3
+    Ch = jax.random.normal(ks[4], (B, S, H, N)) * 0.3
+    y_full, h_full = ssd_chunked(xh, dt, A, Bh, Ch, chunk=8)
+    y_a, h_a = ssd_chunked(xh[:, :s1], dt[:, :s1], A, Bh[:, :s1],
+                           Ch[:, :s1], chunk=8)
+    y_b, h_b = ssd_chunked(xh[:, s1:], dt[:, s1:], A, Bh[:, s1:],
+                           Ch[:, s1:], chunk=8, init_state=h_a)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y_a, y_b], 1)),
+                               np.asarray(y_full), rtol=5e-4, atol=5e-4)
+    np.testing.assert_allclose(np.asarray(h_b), np.asarray(h_full),
+                               rtol=5e-4, atol=5e-4)
+
+
+# ---------------------------------------------------------------------------
+# optimizer invariants
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 50), lr=st.sampled_from([1e-3, 1e-2]))
+@settings(**SETTINGS)
+def test_adamw_frozen_leaves_never_move(seed, lr):
+    key = jax.random.PRNGKey(seed)
+    params = {"train": jax.random.normal(key, (4,)),
+              "frozen": jax.random.normal(key, (4,))}
+    mask = {"train": True, "frozen": False}
+    opt = adamw_init(params, freeze_mask=mask)
+    grads = {"train": jnp.ones(4), "frozen": jnp.ones(4)}
+    new, opt, _ = adamw_update(grads, opt, params, lr=lr, freeze_mask=mask)
+    np.testing.assert_array_equal(np.asarray(new["frozen"]),
+                                  np.asarray(params["frozen"]))
+    assert float(jnp.max(jnp.abs(new["train"] - params["train"]))) > 0
+
+
+@given(seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_adamw_descends_quadratic(seed):
+    key = jax.random.PRNGKey(seed)
+    target = jax.random.normal(key, (8,))
+    params = {"w": jnp.zeros(8)}
+    opt = adamw_init(params)
+    loss0 = float(jnp.sum((params["w"] - target) ** 2))
+    for _ in range(50):
+        g = {"w": 2 * (params["w"] - target)}
+        params, opt, _ = adamw_update(g, opt, params, lr=5e-2, clip_norm=0.0)
+    assert float(jnp.sum((params["w"] - target) ** 2)) < loss0 * 0.5
+
+
+# ---------------------------------------------------------------------------
+# CE oracle invariants
+# ---------------------------------------------------------------------------
+
+@given(t=st.integers(2, 20), v=st.integers(3, 60), seed=st.integers(0, 30))
+@settings(**SETTINGS)
+def test_ce_nonnegative_and_shift_invariant(t, v, seed):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    hs = jax.random.normal(ks[0], (t, 8))
+    ws = jax.random.normal(ks[1], (8, v)) * 0.5
+    lab = jax.random.randint(ks[2], (t,), 0, v)
+    ce, _ = ce_ref(hs, ws, lab)
+    assert bool(jnp.all(ce >= -1e-5))
+    # CE of uniform logits is log V
+    ce_u, _ = ce_ref(jnp.zeros((t, 8)), jnp.zeros((8, v)), lab)
+    np.testing.assert_allclose(np.asarray(ce_u), np.log(v), rtol=1e-5)
