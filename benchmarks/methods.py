@@ -29,6 +29,89 @@ def _uploads_for(sim, corpus, device_cfgs, log):
     return ups
 
 
+def moe_dispatch_bench(T: int = 512, D: int = 128, F: int = 256, E: int = 8,
+                       k: int = 2, *, log=print):
+    """Dispatch + grouped FFN + combine, before/after the fused path.
+
+    "before" replicates the seed's moe_ffn: argsort/searchsorted routing
+    plus ``.at[].add`` scatter dispatch and gather/scatter combine around
+    a batched-einsum grouped FFN.  "after_fused_xla" is the shared
+    permute/unpermute utility (``kernels/moe_dispatch``, XLA variant) —
+    same compute, fused dispatch — and "after_fused_pallas" is the full
+    Pallas ``moe_ffn`` with its custom-VJP backward (interpret-emulated
+    on CPU; the pallas rows are only meaningful on TPU).  Returns
+    {name: us_per_call}.
+    """
+    import jax
+    import jax.numpy as jnp
+    from benchmarks.common import timed
+    from repro.kernels.moe_dispatch.ops import (capacity_positions,
+                                                token_combine, token_dispatch)
+    from repro.kernels.moe_gemm.ops import moe_ffn
+    from repro.kernels.moe_gemm.ref import grouped_ffn_ref
+
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    xt = jax.random.normal(ks[0], (T, D))
+    w, idx = jax.lax.top_k(jax.nn.softmax(
+        jax.random.normal(ks[1], (T, E))), k)
+    w = w / w.sum(-1, keepdims=True)
+    wg = jax.random.normal(ks[2], (E, D, F)) * 0.1
+    wu = jax.random.normal(ks[3], (E, D, F)) * 0.1
+    wo = jax.random.normal(ks[4], (E, F, D)) * 0.1
+    cap = max(-(-T * k // E) * 2, 8)
+
+    def seed_dispatch(xt, w, idx):
+        # the seed's argsort + scatter-add dispatch/combine, verbatim
+        flat_e = idx.reshape(-1)
+        flat_w = w.reshape(-1)
+        flat_tok = jnp.arange(T * k, dtype=jnp.int32) // k
+        order = jnp.argsort(flat_e, stable=True)
+        sorted_e = flat_e[order]
+        pos_sorted = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e,
+                                                          "left")
+        pos = jnp.zeros((T * k,), jnp.int32).at[order].set(
+            pos_sorted.astype(jnp.int32))
+        keep = pos < cap
+        buf = jnp.zeros((E, cap, D), xt.dtype)
+        buf = buf.at[flat_e, jnp.where(keep, pos, 0)].add(
+            jnp.where(keep, 1.0, 0.0)[:, None].astype(xt.dtype)
+            * xt[flat_tok])
+        y = grouped_ffn_ref(buf, wg, wu, wo)
+        gathered = y[flat_e, jnp.where(keep, pos, 0)]
+        gathered = jnp.where(keep[:, None], gathered, 0.0)
+        return jnp.zeros((T, D), xt.dtype).at[flat_tok].add(
+            gathered * flat_w[:, None].astype(xt.dtype))
+
+    def fused_xla(xt, w, idx):
+        flat_e = idx.reshape(-1)
+        flat_tok = jnp.arange(T * k, dtype=jnp.int32) // k
+        pos, keep = capacity_positions(flat_e, cap)
+        slot = flat_e * cap + pos
+        buf = token_dispatch(xt, flat_tok, slot, keep, E * cap,
+                             use_kernel=False)
+        y = grouped_ffn_ref(buf.reshape(E, cap, D), wg, wu, wo)
+        return token_combine(y.reshape(E * cap, D), flat_tok, slot, keep,
+                             w.reshape(-1), T, use_kernel=False)
+
+    out = {}
+    for name, fn in (("before_argsort_scatter", seed_dispatch),
+                     ("after_fused_xla", fused_xla)):
+        us, _ = timed(jax.jit(fn), xt, w, idx)
+        out[name] = us
+        log(f"moe dispatch+ffn+combine {name}: {us:.0f}us")
+
+    us, _ = timed(jax.jit(lambda *a: moe_ffn(*a)), xt, w, idx, wg, wu, wo)
+    out["after_fused_pallas"] = us
+    log(f"moe dispatch+ffn+combine after_fused_pallas: {us:.0f}us")
+
+    grad_after = jax.jit(jax.grad(
+        lambda wg: moe_ffn(xt, w, idx, wg, wu, wo).sum()))
+    us, _ = timed(grad_after, wg)
+    out["after_fused_pallas_backward"] = us
+    log(f"moe grouped-GEMM backward (custom VJP): {us:.0f}us")
+    return out
+
+
 def run_all_methods(n_devices: int, *, log=print, seed: int = 0):
     """Returns {method: {"log_ppl", "accuracy", "comm_bytes", ...}}."""
     tag = f"methods_N{n_devices}_s{seed}"

@@ -228,6 +228,13 @@ def roofline():
              f"tm={t['t_memory_s']:.2e}s;tx={t['t_collective_s']:.2e}s")
 
 
+def kernel_moe_dispatch():
+    """Dispatch+FFN+combine before/after the fused MoE path."""
+    from benchmarks.methods import moe_dispatch_bench
+    for name, us in moe_dispatch_bench(log=_quiet).items():
+        emit(f"kernel/moe_dispatch/{name}", us, "T512_D128_E8_k2")
+
+
 ALL_BENCHES = {
     "table1_perplexity": table1_perplexity,
     "table2_accuracy": table2_accuracy,
@@ -236,6 +243,7 @@ ALL_BENCHES = {
     "fig9_centralized": fig9_centralized,
     "ablation_vaa": ablation_vaa,
     "kernel_micro": kernel_micro,
+    "kernel_moe_dispatch": kernel_moe_dispatch,
     "roofline": roofline,
 }
 

@@ -14,6 +14,7 @@ reduced CPU variants).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, Dict, Optional
 
 import jax
@@ -40,6 +41,21 @@ def device_upload_bytes(params, embedding_dim: int = 32) -> int:
     return tree_bytes(params) + embedding_dim * 4
 
 
+@functools.lru_cache(maxsize=64)
+def _device_step_fn(cfg: ModelConfig):
+    """One jitted train step per config — devices sharing a model family
+    (the common case in a fleet) reuse the compiled step."""
+
+    @jax.jit
+    def step_fn(params, opt, b, lr_now):
+        (loss, _), g = jax.value_and_grad(
+            lambda p: M.loss_fn(p, cfg, b), has_aux=True)(params)
+        params, opt, _ = adamw_update(g, opt, params, lr=lr_now)
+        return params, opt, loss
+
+    return step_fn
+
+
 def train_device(spec: DeviceSpec, corpus: FederatedCorpus, *, steps: int,
                  batch: int, seq_len: int, lr: float = 3e-3,
                  seed: int = 0) -> Dict:
@@ -48,13 +64,7 @@ def train_device(spec: DeviceSpec, corpus: FederatedCorpus, *, steps: int,
     params = M.init_params(jax.random.PRNGKey(seed * 100003 + spec.device_id), cfg)
     opt = adamw_init(params)
     sched = cosine_schedule(lr, steps, warmup=max(steps // 20, 1))
-
-    @jax.jit
-    def step_fn(params, opt, b, lr_now):
-        (loss, _), g = jax.value_and_grad(
-            lambda p: M.loss_fn(p, cfg, b), has_aux=True)(params)
-        params, opt, _ = adamw_update(g, opt, params, lr=lr_now)
-        return params, opt, loss
+    step_fn = _device_step_fn(cfg)
 
     losses = []
     for s in range(steps):

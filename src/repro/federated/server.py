@@ -12,6 +12,7 @@ Phase III — merge the K base models into the global MoE (Fig. 6) and
 from __future__ import annotations
 
 import dataclasses
+import functools
 import time
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -46,6 +47,32 @@ class ServerConfig:
     vaa_heads: int = 4
     p_q: int = 64                 # total VAA queries
     seed: int = 0
+
+
+@functools.lru_cache(maxsize=64)
+def _distill_step_fn(base_cfg, t_cfg, alpha, beta, temperature, n_stages,
+                     vaa_heads, p_q, mesh):
+    """One compiled distill step per (student, teacher, hparams) combo —
+    proxies sharing a teacher family, and baseline re-runs (FedKMT/OFA),
+    reuse it instead of re-jitting."""
+    return jax.jit(distill.make_distill_step(
+        base_cfg, t_cfg, alpha=alpha, beta=beta, temperature=temperature,
+        n_stages=n_stages, vaa_heads=vaa_heads, p_q=p_q,
+        optimizer_update=adamw_update, mesh=mesh))
+
+
+_TUNE_STEP_CACHE: Dict = {}
+
+
+def _tune_step_fn(moe_cfg, mesh, mask):
+    # mask leaves are plain bools, so they can join the key directly
+    key = (moe_cfg, mesh, tuple(jax.tree.leaves(mask)))
+    if key not in _TUNE_STEP_CACHE:
+        if len(_TUNE_STEP_CACHE) > 64:
+            _TUNE_STEP_CACHE.clear()
+        _TUNE_STEP_CACHE[key] = jax.jit(
+            tuning.make_tune_step(moe_cfg, mask, mesh=mesh))
+    return _TUNE_STEP_CACHE[key]
 
 
 class DeepFusionServer:
@@ -97,12 +124,9 @@ class DeepFusionServer:
         opt = adamw_init(trainable)
         sched = cosine_schedule(scfg.distill_lr, scfg.distill_steps,
                                 warmup=max(scfg.distill_steps // 20, 1))
-        step = distill.make_distill_step(
-            base_cfg, t_cfg, alpha=scfg.alpha, beta=scfg.beta,
-            temperature=scfg.temperature, n_stages=scfg.n_stages,
-            vaa_heads=scfg.vaa_heads, p_q=scfg.p_q,
-            optimizer_update=adamw_update, mesh=self.mesh)
-        step = jax.jit(step)
+        step = _distill_step_fn(base_cfg, t_cfg, scfg.alpha, scfg.beta,
+                                scfg.temperature, scfg.n_stages,
+                                scfg.vaa_heads, scfg.p_q, self.mesh)
         hist = []
         for s in range(scfg.distill_steps):
             batch = self.corpus.mixed_eval_batch(scfg.distill_batch,
@@ -125,8 +149,7 @@ class DeepFusionServer:
         self.report["trainable_fraction"] = tuning.trainable_fraction(moe_params)
         self.log(f"Phase III: trainable fraction "
                  f"{self.report['trainable_fraction']:.3f}")
-        step = jax.jit(tuning.make_tune_step(scfg.moe_cfg, mask,
-                                             mesh=self.mesh))
+        step = _tune_step_fn(scfg.moe_cfg, self.mesh, mask)
         sched = cosine_schedule(scfg.tune_lr, scfg.tune_steps,
                                 warmup=max(scfg.tune_steps // 20, 1))
         hist = []

@@ -8,6 +8,7 @@ the paper's Tables I/II metrics).
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -34,16 +35,21 @@ class SimulationConfig:
     alpha_noniid: float = 0.3
 
 
-def evaluate_model(params, cfg: ModelConfig, corpus: FederatedCorpus, *,
-                   seq_len: int, batch: int = 8, n_batches: int = 4,
-                   mesh=None) -> Dict[str, float]:
-    """Per-domain + overall token perplexity (Eq. 3) and accuracy."""
-
+@functools.lru_cache(maxsize=64)
+def _eval_batch_fn(cfg: ModelConfig, mesh):
     @jax.jit
     def eval_batch(params, b):
         _, metrics = M.loss_fn(params, cfg, b, mesh=mesh)
         return metrics["nll"], metrics["tokens"], metrics["accuracy"]
 
+    return eval_batch
+
+
+def evaluate_model(params, cfg: ModelConfig, corpus: FederatedCorpus, *,
+                   seq_len: int, batch: int = 8, n_batches: int = 4,
+                   mesh=None) -> Dict[str, float]:
+    """Per-domain + overall token perplexity (Eq. 3) and accuracy."""
+    eval_batch = _eval_batch_fn(cfg, mesh)
     out = {}
     nll_all, tok_all, acc_all = 0.0, 0.0, []
     for d in range(len(corpus.domains)):

@@ -1,4 +1,11 @@
-"""Public wrapper: GQA layout handling + CPU interpret fallback."""
+"""Public wrapper: GQA layout handling + CPU interpret fallback.
+
+Carries a ``jax.custom_vjp`` so ``use_pallas=True`` models can train
+end-to-end: the forward runs the Pallas kernel, the backward recomputes
+attention through the dense jnp reference and differentiates that
+(O(Sq*Sk) scores in the backward only; a flash backward kernel is a
+listed perf follow-up).
+"""
 from __future__ import annotations
 
 import functools
@@ -8,10 +15,35 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+from repro.kernels.flash_attention.ref import attention_ref
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7))
+def _fa_bhsd(qb, kb, vb, causal, window, softcap, blocks, interpret):
+    return flash_attention_bhsd(
+        qb, kb, vb, causal=causal, window=window, softcap=softcap,
+        scale=1.0 / math.sqrt(qb.shape[-1]), block_q=blocks[0],
+        block_k=blocks[1], interpret=interpret)
+
+
+def _fa_bhsd_fwd(qb, kb, vb, causal, window, softcap, blocks, interpret):
+    out = _fa_bhsd(qb, kb, vb, causal, window, softcap, blocks, interpret)
+    return out, (qb, kb, vb)
+
+
+def _fa_bhsd_bwd(causal, window, softcap, blocks, interpret, res, dy):
+    qb, kb, vb = res
+    _, vjp = jax.vjp(functools.partial(attention_ref, causal=causal,
+                                       window=window, softcap=softcap),
+                     qb, kb, vb)
+    return vjp(dy)
+
+
+_fa_bhsd.defvjp(_fa_bhsd_fwd, _fa_bhsd_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "softcap",
@@ -37,8 +69,6 @@ def flash_attention(q, k, v, q_pos=None, k_pos=None, *, causal: bool = True,
     qb = q.transpose(0, 2, 1, 3).reshape(B * H, Sq, D)
     kb = k.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
     vb = v.transpose(0, 2, 1, 3).reshape(B * H, -1, D)
-    out = flash_attention_bhsd(
-        qb, kb, vb, causal=causal, window=window, softcap=softcap,
-        scale=1.0 / math.sqrt(D), block_q=block_q, block_k=block_k,
-        interpret=interpret)
+    out = _fa_bhsd(qb, kb, vb, causal, window, softcap, (block_q, block_k),
+                   interpret)
     return out.reshape(B, H, Sq, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,3 @@
+from repro.kernels.moe_dispatch import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

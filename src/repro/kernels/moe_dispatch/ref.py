@@ -1,0 +1,13 @@
+"""jnp oracle for the fused gather/scatter-add token movement."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def gather_scatter_add_ref(src, src_rows, dst_rows, scale, n_out: int):
+    """out[dst_rows[i]] += scale[i] * src[src_rows[i]] in f32."""
+    srcf = src.astype(jnp.float32)
+    out = jnp.zeros((n_out, src.shape[1]), jnp.float32)
+    out = out.at[dst_rows].add(scale.astype(jnp.float32)[:, None]
+                               * srcf[src_rows])
+    return out.astype(src.dtype)

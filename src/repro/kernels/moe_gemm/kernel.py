@@ -56,6 +56,65 @@ def _ffn_kernel(x_ref, wg_ref, wu_ref, wo_ref, y_ref, acc_scr, *, act: str):
         y_ref[0] = acc_scr[...].astype(y_ref.dtype)
 
 
+def _matmul_kernel(a_ref, b_ref, y_ref, acc_scr):
+    ki = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    a = a_ref[0].astype(jnp.float32)         # (Bm, Bk)
+    b = b_ref[0].astype(jnp.float32)         # (Bk, Bn)
+    acc_scr[...] += jax.lax.dot(a, b)
+
+    @pl.when(ki == nk - 1)
+    def _fin():
+        y_ref[0] = acc_scr[...].astype(y_ref.dtype)
+
+
+def grouped_matmul(a, b, *, block_m: int = 128, block_n: int = 128,
+                   block_k: int = 512, interpret: bool = False,
+                   out_dtype=None):
+    """Per-expert batched GEMM: a (E, M, K) @ b (E, K, N) -> (E, M, N).
+
+    The grouped-GEMM building block for the MoE backward pass — grid
+    (E, nM, nN, nK) with a sequential K dimension accumulating into an
+    f32 VMEM scratch, the same contraction structure as the forward
+    ``grouped_ffn_ecd`` kernel.
+    """
+    E, M, K = a.shape
+    N = b.shape[-1]
+    bm = min(block_m, M)
+    bn = min(block_n, N)
+    bk = min(block_k, K)
+    pad_m = (-M) % bm
+    pad_n = (-N) % bn
+    pad_k = (-K) % bk
+    if pad_m or pad_k:
+        a = jnp.pad(a, ((0, 0), (0, pad_m), (0, pad_k)))
+    if pad_k or pad_n:
+        b = jnp.pad(b, ((0, 0), (0, pad_k), (0, pad_n)))
+    nm = a.shape[1] // bm
+    nn = b.shape[2] // bn
+    nk = a.shape[2] // bk
+    out_dtype = out_dtype or a.dtype
+
+    out = pl.pallas_call(
+        _matmul_kernel,
+        grid=(E, nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, m, n, k: (e, m, k)),
+            pl.BlockSpec((1, bk, bn), lambda e, m, n, k: (e, k, n)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, m, n, k: (e, m, n)),
+        out_shape=jax.ShapeDtypeStruct((E, nm * bm, nn * bn), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(a, b)
+    return out[:, :M, :N]
+
+
 def grouped_ffn_ecd(x, wg, wu, wo, *, act: str = "silu", block_c: int = 128,
                     block_f: int = 128, interpret: bool = False):
     """x: (E, C, D); wg/wu: (E, D, F); wo: (E, F, D) -> (E, C, D)."""

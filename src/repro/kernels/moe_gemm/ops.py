@@ -1,4 +1,22 @@
-"""Public wrappers for the grouped expert FFN kernel."""
+"""Public wrappers for the grouped expert FFN kernel — trainable.
+
+``grouped_ffn`` carries a ``jax.custom_vjp`` (the pattern proven in
+``kernels/kd_loss/ops.py``): the forward is the fused Pallas kernel, the
+backward is expressed as grouped GEMMs (the ``grouped_matmul`` kernel,
+same contraction structure as the forward) through the gated-activation
+chain:
+
+    g = x @ wg          u = x @ wu          h = act(g) * u
+    dh = dy @ woᵀ       (dg, du) = vjp of act(g)*u at dh
+    dx  = dg @ wgᵀ + du @ wuᵀ
+    dwg = xᵀ @ dg       dwu = xᵀ @ du       dwo = hᵀ @ dy
+
+g/u/h are recomputed in the backward (activation recomputation), so the
+forward saves only its inputs.  ``moe_ffn`` composes the shared fused
+dispatch/combine utility (``kernels/moe_dispatch``) with ``grouped_ffn``
+and is therefore differentiable end-to-end in tokens, routing weights
+and all three expert weight tensors.
+"""
 from __future__ import annotations
 
 import functools
@@ -6,12 +24,52 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.moe_gemm.kernel import grouped_ffn_ecd
-from repro.kernels.moe_gemm import ref as _ref
+from repro.kernels.moe_gemm.kernel import grouped_ffn_ecd, grouped_matmul
+from repro.kernels.moe_dispatch.ops import (capacity_positions,
+                                            token_combine, token_dispatch)
 
 
 def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
+
+
+def _gated_act(act: str, g, u):
+    a = jax.nn.gelu(g, approximate=True) if act == "gelu" else jax.nn.silu(g)
+    return a * u
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6))
+def _grouped_ffn(x, wg, wu, wo, act, blocks, interpret):
+    return grouped_ffn_ecd(x, wg, wu, wo, act=act, block_c=blocks[0],
+                           block_f=blocks[1], interpret=interpret)
+
+
+def _grouped_ffn_fwd(x, wg, wu, wo, act, blocks, interpret):
+    out = _grouped_ffn(x, wg, wu, wo, act, blocks, interpret)
+    return out, (x, wg, wu, wo)
+
+
+def _grouped_ffn_bwd(act, blocks, interpret, res, dy):
+    x, wg, wu, wo = res
+    gmm = functools.partial(grouped_matmul, interpret=interpret)
+    tr = lambda a: jnp.swapaxes(a, -1, -2)
+    xf = x.astype(jnp.float32)
+    dyf = dy.astype(jnp.float32)
+    g = gmm(xf, wg.astype(jnp.float32))          # (E, C, F)
+    u = gmm(xf, wu.astype(jnp.float32))
+    h, h_vjp = jax.vjp(functools.partial(_gated_act, act), g, u)
+    dh = gmm(dyf, tr(wo.astype(jnp.float32)))    # (E, C, F)
+    dg, du = h_vjp(dh)
+    dx = (gmm(dg, tr(wg.astype(jnp.float32)))
+          + gmm(du, tr(wu.astype(jnp.float32))))
+    dwg = gmm(tr(xf), dg)                        # (E, D, F)
+    dwu = gmm(tr(xf), du)
+    dwo = gmm(tr(h), dyf)                        # (E, F, D)
+    return (dx.astype(x.dtype), dwg.astype(wg.dtype), dwu.astype(wu.dtype),
+            dwo.astype(wo.dtype))
+
+
+_grouped_ffn.defvjp(_grouped_ffn_fwd, _grouped_ffn_bwd)
 
 
 @functools.partial(jax.jit, static_argnames=("act", "block_c", "block_f",
@@ -21,15 +79,14 @@ def grouped_ffn(x, wg, wu, wo, *, act: str = "silu", block_c: int = 128,
     """Fixed-capacity grouped FFN — drop-in for the a2a expert compute."""
     if interpret is None:
         interpret = _on_cpu()
-    return grouped_ffn_ecd(x, wg, wu, wo, act=act, block_c=block_c,
-                           block_f=block_f, interpret=interpret)
+    return _grouped_ffn(x, wg, wu, wo, act, (block_c, block_f), interpret)
 
 
 @functools.partial(jax.jit, static_argnames=("act", "interpret"))
 def moe_ffn(xt, w, idx, wg, wu, wo, *, act: str = "silu",
             interpret: bool | None = None):
-    """Routed token-level MoE for the single-device path: sorts tokens by
-    expert into capacity buffers, runs the grouped kernel, scatters back."""
+    """Routed token-level MoE for the single-device path: fused dispatch
+    into capacity buffers, grouped kernel, fused weighted combine."""
     if interpret is None:
         interpret = _on_cpu()
     T, D = xt.shape
@@ -37,19 +94,13 @@ def moe_ffn(xt, w, idx, wg, wu, wo, *, act: str = "silu",
     E = wg.shape[0]
     cap = max(-(-T * k // E) * 2, 8)  # generous static capacity
     flat_e = idx.reshape(-1)
-    flat_w = w.reshape(-1)
     flat_tok = jnp.arange(T * k, dtype=jnp.int32) // k
-    order = jnp.argsort(flat_e, stable=True)
-    sorted_e = flat_e[order]
-    pos_sorted = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e, "left")
-    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
-    keep = pos < cap
-    buf = jnp.zeros((E, cap, D), xt.dtype)
-    buf = buf.at[flat_e, jnp.where(keep, pos, 0)].add(
-        jnp.where(keep, 1.0, 0.0)[:, None].astype(xt.dtype) * xt[flat_tok])
-    y = grouped_ffn_ecd(buf, wg, wu, wo, act=act, interpret=interpret)
-    gathered = y[flat_e, jnp.where(keep, pos, 0)]
-    gathered = jnp.where(keep[:, None], gathered, 0.0)
-    out = jnp.zeros((T, D), xt.dtype).at[flat_tok].add(
-        gathered * flat_w[:, None].astype(xt.dtype))
-    return out
+    pos, keep = capacity_positions(flat_e, cap)
+    slot = flat_e * cap + pos
+    buf = token_dispatch(xt, flat_tok, slot, keep, E * cap,
+                         interpret=interpret)
+    y = _grouped_ffn(buf.reshape(E, cap, D), wg, wu, wo, act, (128, 128),
+                     interpret)
+    out = token_combine(y.reshape(E * cap, D), flat_tok, slot, keep,
+                        w.reshape(-1), T, interpret=interpret)
+    return out.astype(xt.dtype)

@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.kernels.moe_dispatch.ops import (capacity_positions,
+                                            token_combine, token_dispatch)
 from repro.models.config import ModelConfig
 from repro.models import layers
 
@@ -127,26 +129,17 @@ def _a2a_local(xt, w, idx, wg, wu, wo, *, cfg: ModelConfig, ep_axis: str,
     T, D = xt.shape
     k = idx.shape[1]
     E_loc = wg.shape[0]
-    E_pad = E_loc * ep_size
     cap = capacity
 
-    # --- pack: per (destination device, local slot) --------------------
+    # --- pack: per (destination device, local expert, capacity slot) ----
     flat_e = idx.reshape(-1)                     # (T*k,) global expert id
-    flat_w = w.reshape(-1)
     flat_tok = jnp.arange(T * k, dtype=jnp.int32) // k
-    dest = flat_e // E_loc                       # owning device on "model"
-    # position of each assignment within its expert's capacity buffer
-    order = jnp.argsort(flat_e, stable=True)
-    sorted_e = flat_e[order]
-    # rank within equal expert ids
-    pos_in_e = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e, side="left")
-    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_in_e.astype(jnp.int32))
-    keep = pos < cap
-    # buffer layout: (ep_size, E_loc, cap, D)
-    slot = (flat_e % E_loc) * cap + pos          # slot within destination
-    buf = jnp.zeros((ep_size, E_loc * cap, D), xt.dtype)
-    buf = buf.at[dest, jnp.where(keep, slot, 0)].add(
-        jnp.where(keep, 1.0, 0.0)[:, None].astype(xt.dtype) * xt[flat_tok])
+    pos, keep = capacity_positions(flat_e, cap)
+    # flat buffer layout: (ep_size * E_loc * cap); dest device major
+    slot = flat_e * cap + pos                    # == dest*(E_loc*cap) + ...
+    buf = token_dispatch(xt, flat_tok, slot, keep, ep_size * E_loc * cap,
+                         use_kernel=cfg.use_pallas)
+    buf = buf.reshape(ep_size, E_loc * cap, D)
 
     # --- all_to_all: send token buffers to expert owners ----------------
     recv = jax.lax.all_to_all(buf, ep_axis, split_axis=0, concat_axis=0,
@@ -168,11 +161,10 @@ def _a2a_local(xt, w, idx, wg, wu, wo, *, cfg: ModelConfig, ep_axis: str,
                               tiled=False)       # (ep_size, E_loc*cap, D)
 
     # --- unpack + weighted combine ---------------------------------------
-    gathered = back[dest, jnp.where(keep, slot, 0)]   # (T*k, D)
-    gathered = jnp.where(keep[:, None], gathered, 0.0)
-    out = jnp.zeros((T, D), xt.dtype).at[flat_tok].add(
-        gathered * flat_w[:, None].astype(xt.dtype))
-    return out
+    out = token_combine(back.reshape(ep_size * E_loc * cap, D), flat_tok,
+                        slot, keep, w.reshape(-1), T,
+                        use_kernel=cfg.use_pallas)
+    return out.astype(xt.dtype)
 
 
 def moe_a2a(p, cfg: ModelConfig, x, mesh, *, data_axes=("data",),
@@ -244,30 +236,22 @@ def _replicated_ep_local(xt, w, idx, wg, wu, wo, *, cfg: ModelConfig,
     dev = jax.lax.axis_index(axes)
 
     flat_e = idx.reshape(-1)
-    flat_w = w.reshape(-1)
     flat_tok = jnp.arange(T * k, dtype=jnp.int32) // k
-    # rank of each assignment within its expert (capacity accounting)
-    order = jnp.argsort(flat_e, stable=True)
-    sorted_e = flat_e[order]
-    pos_in_e = jnp.arange(T * k) - jnp.searchsorted(sorted_e, sorted_e, "left")
-    pos = jnp.zeros((T * k,), jnp.int32).at[order].set(pos_in_e.astype(jnp.int32))
+    pos, fits = capacity_positions(flat_e, cap)
     local = (flat_e // E_loc) == dev
-    keep = local & (pos < cap)
-    loc_e = jnp.where(local, flat_e % E_loc, 0)
-    slot = jnp.where(keep, pos, 0)
-    buf = jnp.zeros((E_loc, cap, D), xt.dtype)
-    buf = buf.at[loc_e, slot].add(
-        jnp.where(keep, 1.0, 0.0)[:, None].astype(xt.dtype) * xt[flat_tok])
+    keep = local & fits
+    slot = jnp.where(local, flat_e % E_loc, 0) * cap + pos
+    buf = token_dispatch(xt, flat_tok, slot, keep, E_loc * cap,
+                         use_kernel=cfg.use_pallas)
+    buf = buf.reshape(E_loc, cap, D)
     if cfg.use_pallas:
         from repro.kernels.moe_gemm import ops as moe_ops
         y = moe_ops.grouped_ffn(buf, wg, wu, wo, act=cfg.act)
     else:
         y = _expert_ffn(cfg, wg, wu, wo, buf)
-    gathered = y[loc_e, slot]
-    gathered = jnp.where(keep[:, None], gathered, 0.0)
-    out = jnp.zeros((T, D), xt.dtype).at[flat_tok].add(
-        gathered * flat_w[:, None].astype(xt.dtype))
-    return jax.lax.psum(out, axes)
+    out = token_combine(y.reshape(E_loc * cap, D), flat_tok, slot, keep,
+                        w.reshape(-1), T, use_kernel=cfg.use_pallas)
+    return jax.lax.psum(out.astype(xt.dtype), axes)
 
 
 def moe_replicated_ep(p, cfg: ModelConfig, x, mesh):

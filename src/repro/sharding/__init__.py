@@ -1,4 +1,5 @@
 from repro.sharding.rules import (
+    abstract_mesh,
     param_specs,
     opt_state_specs,
     batch_spec,
@@ -7,5 +8,5 @@ from repro.sharding.rules import (
     data_axes_of,
 )
 
-__all__ = ["param_specs", "opt_state_specs", "batch_spec", "cache_specs",
-           "named", "data_axes_of"]
+__all__ = ["abstract_mesh", "param_specs", "opt_state_specs", "batch_spec",
+           "cache_specs", "named", "data_axes_of"]
