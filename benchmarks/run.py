@@ -119,17 +119,16 @@ def fig8_comm(sizes=(16, 32, 64, 128)):
     import jax
     import numpy as np
     from repro.configs import get_config
+    from repro.federated.device import device_upload_bytes
     from repro.models import model as M
     from repro.utils.pytree import tree_size
 
     device_models = ["gpt2", "gpt2-medium", "tinyllama-1.1b", "olmo-1.2b",
                      "bloom-1.1b"]
-    sizes_b = {}
-    for name in device_models:
-        cfg = get_config(name)
-        n = tree_size(jax.eval_shape(
-            lambda c=cfg: M.init_params(jax.random.PRNGKey(0), c)))
-        sizes_b[name] = 2 * n  # bf16 upload
+    # Eq. 5 accounting: configured full-size model weights (bf16) + the
+    # 32-float data embedding — the same helper the simulation bills with
+    sizes_b = {name: device_upload_bytes(get_config(name))
+               for name in device_models}
     moe = get_config("qwen2-moe-a2.7b")
     local = moe.replace(n_experts=2, top_k=2)
     n_local = tree_size(jax.eval_shape(
@@ -138,7 +137,7 @@ def fig8_comm(sizes=(16, 32, 64, 128)):
     rng = np.random.default_rng(0)
     for N in sizes:
         picks = rng.choice(device_models, size=N)
-        deepfusion = int(sum(sizes_b[p] + 128 for p in picks))  # Eq. 5
+        deepfusion = int(sum(sizes_b[p] for p in picks))  # Eq. 5
         emit(f"fig8/comm_GiB/N{N}/deepfusion_oneshot", 0.0,
              round(deepfusion / 2**30, 2))
         for rounds in (1, 10):
@@ -235,6 +234,17 @@ def kernel_moe_dispatch():
         emit(f"kernel/moe_dispatch/{name}", us, "T512_D128_E8_k2")
 
 
+def fleet_scaling(sizes=(8, 32, 64)):
+    """Device-fleet wall-clock: sequential per-step loops vs the
+    vmapped scan-epoch driver.  Also writes BENCH_fleet.json."""
+    from benchmarks.methods import fleet_scaling_bench
+    for n, row in fleet_scaling_bench(sizes, log=_quiet).items():
+        emit(f"fleet/{n}/sequential", row["sequential_s"] * 1e6,
+             f"{row['n_buckets']}buckets")
+        emit(f"fleet/{n}/vmapped", row["fleet_s"] * 1e6,
+             f"speedup={row['speedup']}x")
+
+
 ALL_BENCHES = {
     "table1_perplexity": table1_perplexity,
     "table2_accuracy": table2_accuracy,
@@ -244,6 +254,7 @@ ALL_BENCHES = {
     "ablation_vaa": ablation_vaa,
     "kernel_micro": kernel_micro,
     "kernel_moe_dispatch": kernel_moe_dispatch,
+    "fleet_scaling": fleet_scaling,
     "roofline": roofline,
 }
 

@@ -24,6 +24,7 @@ import numpy as np
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.core import vaa as vaa_mod
+from repro.optim import scan_epoch
 
 
 # ---------------------------------------------------------------------------
@@ -161,3 +162,31 @@ def make_distill_step(s_cfg: ModelConfig, t_cfg: ModelConfig, *, alpha, beta,
         return trainable, opt_state, loss, metrics
 
     return step
+
+
+def make_distill_epoch(s_cfg: ModelConfig, t_cfg: ModelConfig, *, steps,
+                       schedule, alpha, beta, temperature, n_stages,
+                       vaa_heads, p_q, optimizer_update, mesh=None):
+    """Scan-compiled multi-step distillation (see docs/loops.md).
+
+    Builds a jit-able ``(trainable, opt_state, t_params, batches) ->
+    (trainable, opt_state, losses)`` over pre-generated stacked batches
+    ``{tokens/labels: (steps, B, S)}``.  The lr ``schedule`` is evaluated
+    inside the scan from the step counter, so one compiled program covers
+    the whole Phase II epoch with a single host sync at the end.
+    """
+    step_fn = make_distill_step(
+        s_cfg, t_cfg, alpha=alpha, beta=beta, temperature=temperature,
+        n_stages=n_stages, vaa_heads=vaa_heads, p_q=p_q,
+        optimizer_update=optimizer_update, mesh=mesh)
+
+    def epoch(trainable, opt_state, t_params, batches):
+        def carry_step(carry, b, lr):
+            trainable, opt_state, loss, _ = step_fn(*carry, t_params, b, lr)
+            return (trainable, opt_state), loss
+
+        (trainable, opt_state), losses = scan_epoch(
+            carry_step, schedule, steps)((trainable, opt_state), batches)
+        return trainable, opt_state, losses
+
+    return epoch

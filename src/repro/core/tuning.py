@@ -16,7 +16,7 @@ import jax.numpy as jnp
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
-from repro.optim import adamw_init, adamw_update
+from repro.optim import adamw_init, adamw_update, scan_epoch
 from repro.utils.pytree import flatten_with_paths, path_str
 
 _FROZEN = re.compile(r"moe/(wi_gate|wi_up|wo)$|moe/shared/")
@@ -49,6 +49,28 @@ def make_tune_step(cfg: ModelConfig, freeze_mask, *, weight_decay=0.01,
         return params, opt_state, loss, metrics
 
     return step
+
+
+def make_tune_epoch(cfg: ModelConfig, freeze_mask, *, steps, schedule,
+                    weight_decay=0.01, mesh=None):
+    """Scan-compiled multi-step tuning (see docs/loops.md): jit-able
+    ``(params, opt_state, batches) -> (params, opt_state, losses)`` over
+    stacked ``(steps, B, S)`` batches, lr schedule evaluated inside the
+    scan — one host sync per Phase III epoch."""
+    step_fn = make_tune_step(cfg, freeze_mask, weight_decay=weight_decay,
+                             mesh=mesh)
+
+    def carry_step(carry, b, lr):
+        params, opt_state, loss, _ = step_fn(*carry, b, lr)
+        return (params, opt_state), loss
+
+    scanned = scan_epoch(carry_step, schedule, steps)
+
+    def epoch(params, opt_state, batches):
+        (params, opt_state), losses = scanned((params, opt_state), batches)
+        return params, opt_state, losses
+
+    return epoch
 
 
 def init_tuning(params, *, state_dtype=None):

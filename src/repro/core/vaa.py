@@ -31,9 +31,15 @@ from repro.models import layers
 
 
 def patchify(x, n_patches: int):
-    """(B, S, D) -> (B, P, D) by mean-pooling S into P buckets."""
+    """(B, S, D) -> (B, n_patches, D) by mean-pooling S into buckets.
+
+    Always returns exactly ``n_patches`` patches: short sequences
+    (S < n_patches) are edge-padded up to n_patches first, so downstream
+    per-stage slices of the concatenated (B, P_q, d) query block stay
+    aligned (vaa_apply step 3) and L_FM shapes always match.
+    """
     B, S, D = x.shape
-    P = min(n_patches, S)
+    P = n_patches
     pad = (-S) % P
     if pad:
         x = jnp.pad(x, ((0, 0), (0, pad), (0, 0)), mode="edge")

@@ -47,11 +47,26 @@ class FederatedCorpus:
     def device_rng(self, device: int, salt: int = 0) -> np.random.Generator:
         return np.random.default_rng((self.seed, device, salt))
 
-    def device_batch(self, device: int, batch: int, seq_len: int,
-                     step: int = 0) -> Dict:
+    def _device_tokens(self, device: int, batch: int, seq_len: int,
+                       step: int = 0) -> np.ndarray:
         dom = self.domains[int(self.device_domain[device])]
         rng = self.device_rng(device, step + 1)
-        return batch_from_tokens(sample_tokens(dom, rng, batch, seq_len))
+        return sample_tokens(dom, rng, batch, seq_len)
+
+    def device_batch(self, device: int, batch: int, seq_len: int,
+                     step: int = 0) -> Dict:
+        return batch_from_tokens(self._device_tokens(device, batch, seq_len,
+                                                     step))
+
+    def device_batches(self, device: int, steps: int, batch: int,
+                       seq_len: int) -> Dict:
+        """Pre-generates a full local-training epoch for one device as
+        stacked ``(steps, B, S)`` arrays.  Step ``s`` equals
+        ``device_batch(device, batch, seq_len, step=s)`` exactly, so the
+        scan drivers reproduce the per-step loop bit-for-bit."""
+        toks = np.stack([self._device_tokens(device, batch, seq_len, step=s)
+                         for s in range(steps)])
+        return batch_from_tokens(toks)
 
     def device_embedding(self, device: int, dim: int = 32) -> np.ndarray:
         dom = self.domains[int(self.device_domain[device])]
@@ -63,8 +78,8 @@ class FederatedCorpus:
         return batch_from_tokens(
             sample_tokens(self.domains[domain_id], rng, batch, seq_len))
 
-    def mixed_eval_batch(self, batch: int, seq_len: int, seed_salt: int = 0):
-        """Server-side public benchmark data (paper assumes HF/GitHub data)."""
+    def _mixed_tokens(self, batch: int, seq_len: int,
+                      seed_salt: int = 0) -> np.ndarray:
         rng = np.random.default_rng((self.seed, 555_000, seed_salt))
         per = max(batch // len(self.domains), 1)
         parts = []
@@ -74,4 +89,16 @@ class FederatedCorpus:
         if len(toks) < batch:  # pad by repeating
             reps = -(-batch // len(toks))
             toks = np.concatenate([toks] * reps, 0)[:batch]
+        return toks
+
+    def mixed_eval_batch(self, batch: int, seq_len: int, seed_salt: int = 0):
+        """Server-side public benchmark data (paper assumes HF/GitHub data)."""
+        return batch_from_tokens(self._mixed_tokens(batch, seq_len, seed_salt))
+
+    def mixed_eval_batches(self, steps: int, batch: int, seq_len: int,
+                           seed_salt0: int = 0) -> Dict:
+        """Stacked ``(steps, B, S)`` server-data epoch; step ``s`` equals
+        ``mixed_eval_batch(batch, seq_len, seed_salt=seed_salt0 + s)``."""
+        toks = np.stack([self._mixed_tokens(batch, seq_len, seed_salt0 + s)
+                         for s in range(steps)])
         return batch_from_tokens(toks)

@@ -70,9 +70,11 @@ def sample_tokens(domain: DomainSpec, rng: np.random.Generator,
 
 
 def batch_from_tokens(tokens: np.ndarray):
-    """(B, S+1) -> {"tokens": (B,S), "labels": (B,S)} next-token setup."""
-    return {"tokens": jnp.asarray(tokens[:, :-1]),
-            "labels": jnp.asarray(tokens[:, 1:])}
+    """(..., S+1) -> {"tokens": (...,S), "labels": (...,S)} next-token
+    setup.  Rank-agnostic: works for a single (B, S+1) batch and for
+    (T, B, S+1) stacked epochs alike."""
+    return {"tokens": jnp.asarray(tokens[..., :-1]),
+            "labels": jnp.asarray(tokens[..., 1:])}
 
 
 def domain_embedding(domain: DomainSpec, rng: np.random.Generator,

@@ -1,7 +1,8 @@
-from repro.federated.device import DeviceSpec, train_device, device_upload_bytes
+from repro.federated.device import (DeviceSpec, device_upload_bytes,
+                                    train_device, train_fleet)
 from repro.federated.server import DeepFusionServer, ServerConfig
 from repro.federated.simulation import SimulationConfig, run_deepfusion
 
-__all__ = ["DeviceSpec", "train_device", "device_upload_bytes",
-           "DeepFusionServer", "ServerConfig",
+__all__ = ["DeviceSpec", "train_device", "train_fleet",
+           "device_upload_bytes", "DeepFusionServer", "ServerConfig",
            "SimulationConfig", "run_deepfusion"]

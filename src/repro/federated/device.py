@@ -6,16 +6,25 @@ trains it on private local data to convergence, and uploads it **once**
 (one-shot FL, Eq. 5) together with a low-rank data embedding for
 clustering.
 
-The fleet is simulated in-process.  Communication cost accounting uses
-the *configured* model's true parameter count (so Fig. 8-style numbers
-reflect the paper's device models even when the simulated training runs
-reduced CPU variants).
+The fleet is simulated in-process.  Two compiled hot paths (see
+docs/loops.md):
+
+* ``train_device`` runs the whole local epoch as ONE ``lax.scan``-ed
+  XLA program over pre-generated stacked batches — a single host sync
+  per epoch instead of one per step;
+* ``train_fleet`` buckets devices by ``ModelConfig`` and ``jax.vmap``s
+  the scanned epoch over the device axis, so N same-arch devices train
+  as one compiled program instead of N sequential loops.
+
+Communication cost accounting uses the *configured* model's true
+parameter count (so Fig. 8-style numbers reflect the paper's device
+models even when the simulated training runs reduced CPU variants).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +33,7 @@ import numpy as np
 from repro.data.federated import FederatedCorpus
 from repro.models import model as M
 from repro.models.config import ModelConfig
-from repro.optim import adamw_init, adamw_update, cosine_schedule
+from repro.optim import adamw_init, adamw_update, cosine_schedule, scan_epoch
 from repro.utils.pytree import tree_bytes
 
 
@@ -34,49 +43,167 @@ class DeviceSpec:
     cfg: ModelConfig            # the on-device LLM this device runs
     arch_id: int                # index into the device-model family list
     domain_id: int              # ground-truth knowledge domain (hidden)
+    # full-size variant of ``cfg`` when the simulation trains a reduced
+    # CPU stand-in; comm-cost accounting (Fig. 8) bills this one.
+    full_cfg: Optional[ModelConfig] = None
 
-
-def device_upload_bytes(params, embedding_dim: int = 32) -> int:
-    """One-shot upload = model weights + the tiny data embedding (Eq. 5)."""
-    return tree_bytes(params) + embedding_dim * 4
+    @property
+    def comm_cfg(self) -> ModelConfig:
+        return self.full_cfg or self.cfg
 
 
 @functools.lru_cache(maxsize=64)
-def _device_step_fn(cfg: ModelConfig):
-    """One jitted train step per config — devices sharing a model family
-    (the common case in a fleet) reuse the compiled step."""
+def model_param_bytes(cfg: ModelConfig) -> int:
+    """Weight bytes of ``cfg`` at its configured dtype, from abstract
+    shapes only (no allocation — works for 100B+ configs)."""
+    shapes = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    return tree_bytes(shapes)
 
-    @jax.jit
-    def step_fn(params, opt, b, lr_now):
+
+def device_upload_bytes(cfg: ModelConfig, embedding_dim: int = 32) -> int:
+    """One-shot upload = model weights + the tiny data embedding (Eq. 5).
+
+    Billed from the configured ``ModelConfig``'s true parameter count,
+    NOT from whatever reduced variant the simulation happens to train.
+    """
+    return model_param_bytes(cfg) + embedding_dim * 4
+
+
+# ---------------------------------------------------------------------------
+# compiled local-training epochs
+# ---------------------------------------------------------------------------
+
+def _step_core(cfg: ModelConfig) -> Callable:
+    """The one local-training step: shared by the per-step reference
+    loop and the scanned epoch, so the two paths cannot diverge."""
+
+    def step(params, opt, b, lr_now):
         (loss, _), g = jax.value_and_grad(
             lambda p: M.loss_fn(p, cfg, b), has_aux=True)(params)
         params, opt, _ = adamw_update(g, opt, params, lr=lr_now)
         return params, opt, loss
 
-    return step_fn
+    return step
+
+
+def _epoch_core(cfg: ModelConfig, steps: int, lr: float,
+                warmup: int) -> Callable:
+    """Un-jitted scanned epoch: (params, opt, stacked batches) ->
+    (params, opt, per-step losses).  The lr schedule is evaluated inside
+    the scan from the step counter."""
+    sched = cosine_schedule(lr, steps, warmup=warmup)
+    step = _step_core(cfg)
+
+    def carry_step(carry, b, lr_now):
+        params, opt, loss = step(*carry, b, lr_now)
+        return (params, opt), loss
+
+    scanned = scan_epoch(carry_step, sched, steps)
+
+    def epoch(params, opt, batches):
+        (params, opt), losses = scanned((params, opt), batches)
+        return params, opt, losses
+
+    return epoch
+
+
+@functools.lru_cache(maxsize=64)
+def _device_epoch_fn(cfg: ModelConfig, steps: int, lr: float, warmup: int):
+    return jax.jit(_epoch_core(cfg, steps, lr, warmup),
+                   donate_argnums=(0, 1))
+
+
+@functools.lru_cache(maxsize=64)
+def _fleet_epoch_fn(cfg: ModelConfig, steps: int, lr: float, warmup: int):
+    """The scanned epoch vmapped over a leading device axis — one
+    compiled program trains every same-arch device in the bucket."""
+    return jax.jit(jax.vmap(_epoch_core(cfg, steps, lr, warmup)),
+                   donate_argnums=(0, 1))
+
+
+@functools.lru_cache(maxsize=64)
+def _device_step_fn(cfg: ModelConfig):
+    """Per-step reference path (kept for equivalence tests and the
+    fleet-scaling benchmark baseline)."""
+    return jax.jit(_step_core(cfg))
+
+
+def _device_init(spec: DeviceSpec, seed: int):
+    params = M.init_params(
+        jax.random.PRNGKey(seed * 100003 + spec.device_id), spec.cfg)
+    return params, adamw_init(params)
+
+
+def _upload(spec: DeviceSpec, corpus: FederatedCorpus, params,
+            losses) -> Dict:
+    return {
+        "params": params,
+        "embedding": corpus.device_embedding(spec.device_id),
+        "losses": [float(x) for x in np.asarray(losses)],
+        "upload_bytes": device_upload_bytes(spec.comm_cfg),
+        "arch_id": spec.arch_id,
+        "device_id": spec.device_id,
+    }
 
 
 def train_device(spec: DeviceSpec, corpus: FederatedCorpus, *, steps: int,
                  batch: int, seq_len: int, lr: float = 3e-3,
-                 seed: int = 0) -> Dict:
-    """Local training loop.  Returns {"params", "embedding", "losses", ...}."""
-    cfg = spec.cfg
-    params = M.init_params(jax.random.PRNGKey(seed * 100003 + spec.device_id), cfg)
-    opt = adamw_init(params)
-    sched = cosine_schedule(lr, steps, warmup=max(steps // 20, 1))
-    step_fn = _device_step_fn(cfg)
+                 seed: int = 0, compiled: bool = True) -> Dict:
+    """Local training.  Returns {"params", "embedding", "losses", ...}.
 
+    ``compiled=True`` (default) runs the epoch as one scanned program;
+    ``compiled=False`` keeps the historical per-step loop (one host sync
+    per step) for equivalence tests and benchmarks.
+    """
+    params, opt = _device_init(spec, seed)
+    warmup = max(steps // 20, 1)
+    if compiled:
+        batches = corpus.device_batches(spec.device_id, steps, batch, seq_len)
+        epoch = _device_epoch_fn(spec.cfg, steps, lr, warmup)
+        params, opt, losses = epoch(params, opt, batches)
+        return _upload(spec, corpus, params, losses)
+
+    sched = cosine_schedule(lr, steps, warmup=warmup)
+    step_fn = _device_step_fn(spec.cfg)
     losses = []
     for s in range(steps):
         b = corpus.device_batch(spec.device_id, batch, seq_len, step=s)
         params, opt, loss = step_fn(params, opt, b, sched(s))
         losses.append(float(loss))
+    return _upload(spec, corpus, params, losses)
 
-    return {
-        "params": params,
-        "embedding": corpus.device_embedding(spec.device_id),
-        "losses": losses,
-        "upload_bytes": device_upload_bytes(params),
-        "arch_id": spec.arch_id,
-        "device_id": spec.device_id,
-    }
+
+def train_fleet(fleet: Sequence[DeviceSpec], corpus: FederatedCorpus, *,
+                steps: int, batch: int, seq_len: int, lr: float = 3e-3,
+                seed: int = 0) -> List[Dict]:
+    """Arch-bucketed compiled fleet training.
+
+    Groups the fleet by ``ModelConfig``, stacks each bucket's init
+    params / optimizer state / pre-generated batch streams along a new
+    device axis, and runs the vmapped scanned epoch once per bucket.
+    Returns uploads in the fleet's original order, identical to calling
+    ``train_device`` per spec (same seeds, same batches).
+    """
+    buckets: Dict[ModelConfig, List[DeviceSpec]] = {}
+    for spec in fleet:
+        buckets.setdefault(spec.cfg, []).append(spec)
+
+    uploads: Dict[int, Dict] = {}
+    warmup = max(steps // 20, 1)
+    for cfg, specs in buckets.items():
+        inits = [_device_init(s, seed) for s in specs]
+        params = jax.tree.map(lambda *xs: jnp.stack(xs),
+                              *[p for p, _ in inits])
+        opt = jax.tree.map(lambda *xs: jnp.stack(xs), *[o for _, o in inits])
+        batches = jax.tree.map(
+            lambda *xs: jnp.stack(xs),
+            *[corpus.device_batches(s.device_id, steps, batch, seq_len)
+              for s in specs])
+        epoch = _fleet_epoch_fn(cfg, steps, lr, warmup)
+        params, _, losses = epoch(params, opt, batches)
+        losses = np.asarray(losses)          # one host sync per bucket
+        for i, spec in enumerate(specs):
+            uploads[spec.device_id] = _upload(
+                spec, corpus, jax.tree.map(lambda x: x[i], params), losses[i])
+
+    return [uploads[spec.device_id] for spec in fleet]

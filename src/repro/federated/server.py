@@ -50,29 +50,35 @@ class ServerConfig:
 
 
 @functools.lru_cache(maxsize=64)
-def _distill_step_fn(base_cfg, t_cfg, alpha, beta, temperature, n_stages,
-                     vaa_heads, p_q, mesh):
-    """One compiled distill step per (student, teacher, hparams) combo —
+def _distill_epoch_fn(base_cfg, t_cfg, alpha, beta, temperature, n_stages,
+                      vaa_heads, p_q, steps, lr, warmup, mesh):
+    """One compiled scan-epoch per (student, teacher, hparams) combo —
     proxies sharing a teacher family, and baseline re-runs (FedKMT/OFA),
-    reuse it instead of re-jitting."""
-    return jax.jit(distill.make_distill_step(
-        base_cfg, t_cfg, alpha=alpha, beta=beta, temperature=temperature,
+    reuse it instead of re-jitting.  Trainable/opt buffers are donated;
+    the whole Phase II epoch is one XLA program (docs/loops.md)."""
+    return jax.jit(distill.make_distill_epoch(
+        base_cfg, t_cfg, steps=steps,
+        schedule=cosine_schedule(lr, steps, warmup=warmup),
+        alpha=alpha, beta=beta, temperature=temperature,
         n_stages=n_stages, vaa_heads=vaa_heads, p_q=p_q,
-        optimizer_update=adamw_update, mesh=mesh))
+        optimizer_update=adamw_update, mesh=mesh), donate_argnums=(0, 1))
 
 
-_TUNE_STEP_CACHE: Dict = {}
+_TUNE_EPOCH_CACHE: Dict = {}
 
 
-def _tune_step_fn(moe_cfg, mesh, mask):
+def _tune_epoch_fn(moe_cfg, mesh, mask, steps, lr, warmup):
     # mask leaves are plain bools, so they can join the key directly
-    key = (moe_cfg, mesh, tuple(jax.tree.leaves(mask)))
-    if key not in _TUNE_STEP_CACHE:
-        if len(_TUNE_STEP_CACHE) > 64:
-            _TUNE_STEP_CACHE.clear()
-        _TUNE_STEP_CACHE[key] = jax.jit(
-            tuning.make_tune_step(moe_cfg, mask, mesh=mesh))
-    return _TUNE_STEP_CACHE[key]
+    key = (moe_cfg, mesh, tuple(jax.tree.leaves(mask)), steps, lr, warmup)
+    if key not in _TUNE_EPOCH_CACHE:
+        if len(_TUNE_EPOCH_CACHE) > 64:
+            _TUNE_EPOCH_CACHE.clear()
+        _TUNE_EPOCH_CACHE[key] = jax.jit(
+            tuning.make_tune_epoch(
+                moe_cfg, mask, steps=steps,
+                schedule=cosine_schedule(lr, steps, warmup=warmup),
+                mesh=mesh), donate_argnums=(0, 1))
+    return _TUNE_EPOCH_CACHE[key]
 
 
 class DeepFusionServer:
@@ -113,8 +119,10 @@ class DeepFusionServer:
         t_cfg = self.device_cfgs[proxy_item["arch"]]
         t_params = proxy_item["params"]
         key = jax.random.PRNGKey(scfg.seed + 101 + seed_offset)
-        s_params = init_params if init_params is not None else \
-            M.init_params(key, base_cfg)
+        # copy caller-provided warm starts: the compiled epoch donates its
+        # trainable buffers, and donation must never eat a caller's arrays
+        s_params = jax.tree.map(jnp.array, init_params) \
+            if init_params is not None else M.init_params(key, base_cfg)
         vaa_params = vaa_mod.init_vaa(
             jax.random.PRNGKey(scfg.seed + 202 + seed_offset),
             n_stages=scfg.n_stages, d_student=base_cfg.d_model,
@@ -122,18 +130,16 @@ class DeepFusionServer:
             p_q=scfg.p_q)
         trainable = {"student": s_params, "vaa": vaa_params}
         opt = adamw_init(trainable)
-        sched = cosine_schedule(scfg.distill_lr, scfg.distill_steps,
-                                warmup=max(scfg.distill_steps // 20, 1))
-        step = _distill_step_fn(base_cfg, t_cfg, scfg.alpha, scfg.beta,
-                                scfg.temperature, scfg.n_stages,
-                                scfg.vaa_heads, scfg.p_q, self.mesh)
-        hist = []
-        for s in range(scfg.distill_steps):
-            batch = self.corpus.mixed_eval_batch(scfg.distill_batch,
-                                                 scfg.seq_len, seed_salt=s)
-            trainable, opt, loss, metrics = step(trainable, opt, t_params,
-                                                 batch, sched(s))
-            hist.append(float(loss))
+        epoch = _distill_epoch_fn(base_cfg, t_cfg, scfg.alpha, scfg.beta,
+                                  scfg.temperature, scfg.n_stages,
+                                  scfg.vaa_heads, scfg.p_q,
+                                  scfg.distill_steps, scfg.distill_lr,
+                                  max(scfg.distill_steps // 20, 1), self.mesh)
+        batches = self.corpus.mixed_eval_batches(scfg.distill_steps,
+                                                 scfg.distill_batch,
+                                                 scfg.seq_len)
+        trainable, opt, losses = epoch(trainable, opt, t_params, batches)
+        hist = [float(x) for x in np.asarray(losses)]
         self.log(f"Phase II: proxy c{proxy_item['cluster']} distilled "
                  f"loss {hist[0]:.3f}->{hist[-1]:.3f}")
         return trainable["student"], hist
@@ -149,16 +155,14 @@ class DeepFusionServer:
         self.report["trainable_fraction"] = tuning.trainable_fraction(moe_params)
         self.log(f"Phase III: trainable fraction "
                  f"{self.report['trainable_fraction']:.3f}")
-        step = _tune_step_fn(scfg.moe_cfg, self.mesh, mask)
-        sched = cosine_schedule(scfg.tune_lr, scfg.tune_steps,
-                                warmup=max(scfg.tune_steps // 20, 1))
-        hist = []
-        for s in range(scfg.tune_steps):
-            batch = self.corpus.mixed_eval_batch(scfg.tune_batch, scfg.seq_len,
-                                                 seed_salt=10_000 + s)
-            moe_params, opt, loss, metrics = step(moe_params, opt, batch,
-                                                  sched(s))
-            hist.append(float(loss))
+        epoch = _tune_epoch_fn(scfg.moe_cfg, self.mesh, mask, scfg.tune_steps,
+                               scfg.tune_lr, max(scfg.tune_steps // 20, 1))
+        batches = self.corpus.mixed_eval_batches(scfg.tune_steps,
+                                                 scfg.tune_batch,
+                                                 scfg.seq_len,
+                                                 seed_salt0=10_000)
+        moe_params, opt, losses = epoch(moe_params, opt, batches)
+        hist = [float(x) for x in np.asarray(losses)]
         self.log(f"Phase III: tune loss {hist[0]:.3f}->{hist[-1]:.3f}")
         return moe_params, hist
 
@@ -168,11 +172,14 @@ class DeepFusionServer:
         t0 = time.time()
         proxies, _ = self.cluster(uploads)
         base_cfg = merge.base_config_of(self.cfg.moe_cfg)
-        bases = []
+        bases, distill_hists = [], []
         for i, p in enumerate(proxies):
             s_params, hist = self.distill_proxy(p, base_cfg, seed_offset=i)
             bases.append(s_params)
+            distill_hists.append(hist)
         moe_params, tune_hist = self.merge_and_tune(bases)
+        self.report["distill_hists"] = distill_hists
+        self.report["tune_hist"] = tune_hist
         self.report["comm_bytes"] = int(sum(u["upload_bytes"] for u in uploads))
         self.report["wall_s"] = time.time() - t0
         return moe_params, self.report

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.federated import FederatedCorpus
-from repro.federated.device import DeviceSpec, train_device
+from repro.federated.device import DeviceSpec, train_fleet
 from repro.federated.server import DeepFusionServer, ServerConfig
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -69,36 +69,45 @@ def evaluate_model(params, cfg: ModelConfig, corpus: FederatedCorpus, *,
 
 
 def build_fleet(sim: SimulationConfig, corpus: FederatedCorpus,
-                device_cfgs: Sequence[ModelConfig]) -> List[DeviceSpec]:
+                device_cfgs: Sequence[ModelConfig], *,
+                full_cfgs: Optional[Sequence[ModelConfig]] = None
+                ) -> List[DeviceSpec]:
+    """``full_cfgs`` (parallel to ``device_cfgs``): the full-size model
+    each family stands in for, so comm-cost accounting bills the paper's
+    device LLMs even when the simulation trains reduced CPU variants."""
     rng = np.random.default_rng(sim.seed + 42)
     fleet = []
     for n in range(sim.n_devices):
         arch = int(rng.integers(len(device_cfgs)))
         fleet.append(DeviceSpec(
             device_id=n, cfg=device_cfgs[arch], arch_id=arch,
-            domain_id=int(corpus.device_domain[n])))
+            domain_id=int(corpus.device_domain[n]),
+            full_cfg=full_cfgs[arch] if full_cfgs else None))
     return fleet
 
 
 def run_deepfusion(sim: SimulationConfig, server_cfg: ServerConfig,
                    device_cfgs: Sequence[ModelConfig], *,
                    log: Callable[[str], None] = print,
-                   uploads=None, corpus=None):
-    """Returns (moe_params, report) — report carries metrics + comm cost."""
+                   uploads=None, corpus=None, full_cfgs=None):
+    """Returns (moe_params, report) — report carries metrics + comm cost.
+
+    ``full_cfgs`` optionally maps each device family to the full-size
+    model it stands in for (comm-cost billing; see build_fleet)."""
     corpus = corpus or FederatedCorpus.build(
         seed=sim.seed, n_devices=sim.n_devices, n_domains=sim.n_domains,
         vocab=sim.vocab, alpha=sim.alpha_noniid)
     if uploads is None:
-        fleet = build_fleet(sim, corpus, device_cfgs)
-        uploads = []
-        for spec in fleet:
-            up = train_device(spec, corpus, steps=sim.device_steps,
+        fleet = build_fleet(sim, corpus, device_cfgs, full_cfgs=full_cfgs)
+        # arch-bucketed vmapped fleet training: one compiled program per
+        # model family instead of n_devices sequential loops
+        uploads = train_fleet(fleet, corpus, steps=sim.device_steps,
                               batch=sim.device_batch, seq_len=sim.seq_len,
                               seed=sim.seed)
+        for spec, up in zip(fleet, uploads):
             log(f"device {spec.device_id} (arch {spec.arch_id}, "
                 f"domain {spec.domain_id}): loss "
                 f"{up['losses'][0]:.3f}->{up['losses'][-1]:.3f}")
-            uploads.append(up)
     server = DeepFusionServer(server_cfg, corpus, device_cfgs, log=log)
     moe_params, report = server.run(uploads)
     metrics = evaluate_model(moe_params, server_cfg.moe_cfg, corpus,
@@ -106,6 +115,12 @@ def run_deepfusion(sim: SimulationConfig, server_cfg: ServerConfig,
     report["metrics"] = metrics
     report["uploads"] = uploads
     report["corpus"] = corpus
+    if report.get("distill_hists"):
+        finals = ", ".join(f"{h[-1]:.3f}" for h in report["distill_hists"])
+        log(f"Phase II final losses per proxy: [{finals}]")
+    if report.get("tune_hist"):
+        log(f"Phase III tune: {report['tune_hist'][0]:.3f}->"
+            f"{report['tune_hist'][-1]:.3f} over {len(report['tune_hist'])} steps")
     log(f"global MoE: log-ppl {metrics['log_ppl']:.4f} "
         f"acc {metrics['accuracy']:.3f}")
     return moe_params, report

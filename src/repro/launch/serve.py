@@ -17,18 +17,25 @@ from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
 
 
-def pad_cache_to(cache, prefill_caches, prompt_len):
-    """Copy prefill cache entries (length S_p) into a larger decode cache."""
+def pad_cache_to(cache, prefill_caches):
+    """Copy prefill cache entries (length S_p) into a larger decode cache.
+
+    Exactly one dim (the sequence axis) may differ between the decode
+    and prefill entries; anything else is a caller bug and raises.
+    """
     def copy(dst, src):
         if dst.shape == src.shape:
             return src.astype(dst.dtype)
-        # find the (single) differing dim = the sequence axis
-        for ax, (a, b) in enumerate(zip(dst.shape, src.shape)):
-            if a != b:
-                idx = [slice(None)] * dst.ndim
-                idx[ax] = slice(0, b)
-                return dst.at[tuple(idx)].set(src.astype(dst.dtype))
-        return src.astype(dst.dtype)
+        diff = [ax for ax, (a, b) in enumerate(zip(dst.shape, src.shape))
+                if a != b]
+        if dst.ndim != src.ndim or len(diff) != 1:
+            raise ValueError(
+                f"pad_cache_to: decode cache {dst.shape} and prefill cache "
+                f"{src.shape} differ in more than one dim — the caches were "
+                f"built for different batch/model shapes")
+        idx = [slice(None)] * dst.ndim
+        idx[diff[0]] = slice(0, src.shape[diff[0]])
+        return dst.at[tuple(idx)].set(src.astype(dst.dtype))
 
     return jax.tree.map(copy, cache, prefill_caches)
 
@@ -67,10 +74,10 @@ def main():
         cache = M.init_decode_cache(cfg, B, cap)
         # align prefill cache into the decode cache (attn-cache archs)
         if cfg.arch_type in ("dense", "moe", "vlm"):
-            cache["blocks"] = pad_cache_to(cache["blocks"], pc["blocks"], P)
+            cache["blocks"] = pad_cache_to(cache["blocks"], pc["blocks"])
             if "dense_blocks" in pc:
                 cache["dense_blocks"] = pad_cache_to(
-                    cache["dense_blocks"], pc["dense_blocks"], P)
+                    cache["dense_blocks"], pc["dense_blocks"])
         elif cfg.arch_type == "ssm":
             cache = {"blocks": pc["blocks"]}
         step = jax.jit(lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))

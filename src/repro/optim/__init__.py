@@ -1,5 +1,7 @@
 from repro.optim.adamw import adamw_init, adamw_update, global_norm_clip
 from repro.optim.schedule import cosine_schedule, linear_schedule, constant_schedule
+from repro.optim.loops import scan_epoch
 
 __all__ = ["adamw_init", "adamw_update", "global_norm_clip",
-           "cosine_schedule", "linear_schedule", "constant_schedule"]
+           "cosine_schedule", "linear_schedule", "constant_schedule",
+           "scan_epoch"]

@@ -1,0 +1,29 @@
+"""Shared scan-epoch builder for the compiled training loops.
+
+One definition of the multi-step contract (docs/loops.md): scan over
+``(stacked batches, step counter)``, lr schedule evaluated inside the
+scan, per-step losses returned as a ``(steps,)`` array.  The device,
+distillation and tuning epochs all build on this, so the counter/carry
+semantics cannot drift between them.
+"""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def scan_epoch(step: Callable, schedule: Callable, steps: int) -> Callable:
+    """``step: (carry, batch, lr) -> (carry, loss)`` -> scanned
+    ``epoch: (carry, batches) -> (carry, losses)`` over stacked batches
+    with the schedule applied to the step counter."""
+
+    def epoch(carry, batches):
+        def body(carry, inp):
+            b, s = inp
+            return step(carry, b, schedule(s))
+
+        return jax.lax.scan(body, carry, (batches, jnp.arange(steps)))
+
+    return epoch

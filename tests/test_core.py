@@ -131,6 +131,34 @@ def test_vaa_attention_mixes_stages():
     assert float(jnp.max(jnp.abs(out_a[2] - out_b[2]))) > 1e-6
 
 
+def test_vaa_short_sequence_pads_to_full_patches():
+    """Regression: S < P_q/J used to yield min(P, S) patches, misaligning
+    the per-stage slices of the concatenated query block and breaking
+    L_FM shapes.  patchify must always return exactly P patches."""
+    J, B, S, dS, dT, pq = 4, 2, 8, 16, 24, 64
+    P = pq // J  # 16 > S
+    params = vaa_mod.init_vaa(jax.random.PRNGKey(0), n_stages=J,
+                              d_student=dS, d_teacher=dT, d=16, n_heads=2,
+                              p_q=pq)
+    stages = [jax.random.normal(jax.random.PRNGKey(i), (B, S, dS))
+              for i in range(J)]
+    assert vaa_mod.patchify(stages[0], P).shape == (B, P, dS)
+    outs = vaa_mod.vaa_apply(params, stages, n_heads=2, p_q=pq)
+    assert len(outs) == J
+    for o in outs:
+        assert o.shape == (B, P, dT)
+        assert bool(jnp.all(jnp.isfinite(o)))
+    t_stages = [jax.random.normal(jax.random.PRNGKey(10 + i), (B, S, dT))
+                for i in range(J)]
+    loss = vaa_mod.feature_matching_loss(params, stages, t_stages,
+                                         n_heads=2, p_q=pq)
+    assert jnp.isfinite(loss) and loss >= 0
+    g = jax.grad(lambda p: vaa_mod.feature_matching_loss(
+        p, stages, t_stages, n_heads=2, p_q=pq))(params)
+    gn = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(gn) and gn > 0
+
+
 def test_patchify_preserves_mean():
     x = jax.random.normal(jax.random.PRNGKey(0), (2, 16, 8))
     p = vaa_mod.patchify(x, 4)

@@ -1,0 +1,30 @@
+"""Unit tests for serving-launcher cache alignment (launch/serve.py)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.launch.serve import pad_cache_to
+
+
+def test_pad_cache_same_shape_copies():
+    dst = jnp.zeros((2, 8, 4))
+    src = jnp.ones((2, 8, 4), jnp.float16)
+    out = pad_cache_to({"k": dst}, {"k": src})
+    assert out["k"].dtype == dst.dtype
+    np.testing.assert_array_equal(np.asarray(out["k"]), 1.0)
+
+
+def test_pad_cache_grows_single_seq_axis():
+    dst = jnp.zeros((2, 8, 4))
+    src = jnp.ones((2, 5, 4))
+    out = pad_cache_to(dst, src)
+    np.testing.assert_array_equal(np.asarray(out[:, :5]), 1.0)
+    np.testing.assert_array_equal(np.asarray(out[:, 5:]), 0.0)
+
+
+def test_pad_cache_rejects_multi_dim_mismatch():
+    dst = jnp.zeros((2, 8, 4))
+    with pytest.raises(ValueError, match="more than one dim"):
+        pad_cache_to(dst, jnp.ones((3, 5, 4)))     # batch AND seq differ
+    with pytest.raises(ValueError, match="more than one dim"):
+        pad_cache_to(dst, jnp.ones((2, 5, 4, 1)))  # rank mismatch

@@ -62,6 +62,19 @@ def test_oneshot_comm_equals_sum_of_uploads(pipeline_result):
     assert rep["comm_bytes"] == expect  # Eq. 5
 
 
+def test_report_records_phase_histories(pipeline_result):
+    # Phase II per-proxy distill curves + Phase III tune curve must be
+    # surfaced in the report (previously computed and dropped)
+    rep = pipeline_result["report"]
+    scfg = pipeline_result["scfg"]
+    assert len(rep["distill_hists"]) == rep["n_clusters"]
+    for h in rep["distill_hists"]:
+        assert len(h) == scfg.distill_steps
+        assert all(np.isfinite(x) for x in h)
+    assert len(rep["tune_hist"]) == scfg.tune_steps
+    assert all(np.isfinite(x) for x in rep["tune_hist"])
+
+
 def test_trainable_fraction_small(pipeline_result):
     # §IV.D: experts frozen -> only a minority of params train in Phase III
     assert pipeline_result["report"]["trainable_fraction"] < 0.5
