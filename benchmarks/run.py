@@ -234,6 +234,17 @@ def kernel_moe_dispatch():
         emit(f"kernel/moe_dispatch/{name}", us, "T512_D128_E8_k2")
 
 
+def serving():
+    """Serving throughput: python-loop vs scanned decode vs continuous
+    batching on Poisson mixed-length traffic.  Writes BENCH_serve.json."""
+    from benchmarks.serving import serving_bench
+    res = serving_bench(log=_quiet)
+    for mode, row in res["modes"].items():
+        emit(f"serve/{mode}", row["wall_s"] * 1e6, f"{row['tok_s']}tok/s")
+    emit("serve/speedup_scan_vs_loop", 0.0, res["speedup_scan_vs_loop"])
+    emit("serve/speedup_cb_vs_loop", 0.0, res["speedup_cb_vs_loop"])
+
+
 def fleet_scaling(sizes=(8, 32, 64)):
     """Device-fleet wall-clock: sequential per-step loops vs the
     vmapped scan-epoch driver.  Also writes BENCH_fleet.json."""
@@ -255,6 +266,7 @@ ALL_BENCHES = {
     "kernel_micro": kernel_micro,
     "kernel_moe_dispatch": kernel_moe_dispatch,
     "fleet_scaling": fleet_scaling,
+    "serving": serving,
     "roofline": roofline,
 }
 

@@ -1,0 +1,178 @@
+"""Serving benchmark: python-loop vs scanned decode vs continuous batching.
+
+Drives the SAME Poisson-arrival, mixed prompt/gen-length traffic through
+three serving paths (greedy decoding, identical outputs):
+
+  python_loop : per-request B=1, one jit dispatch per generated token —
+                the seed repo's serving path.
+  scanned     : per-request B=1, the whole decode loop as ONE
+                ``lax.scan`` dispatch (``models.model.generate``).
+  continuous  : the slot-based ``ServeEngine`` — scanned segments over a
+                fixed-capacity batch, finished slots refilled from the
+                queue between segments.
+
+Each mode runs once untimed (compile warmup; the prefill jit is the
+engine's own, so the three modes share its compile cache), then once
+timed.  Writes BENCH_serve.json at the repo root.
+"""
+from __future__ import annotations
+
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import ServeEngine
+from repro.serve.engine import _prefill_fn
+
+PROMPT_LENS = (8, 16, 24)
+GEN_LENS = (6, 10, 14)
+MEAN_GAP_S = 0.002
+
+
+@functools.lru_cache(maxsize=None)
+def _step_fn(cfg):
+    return jax.jit(lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))
+
+
+def _traffic(cfg, n: int, seed: int):
+    rng = np.random.default_rng(seed)
+    lengths = [(int(rng.choice(PROMPT_LENS)), int(rng.choice(GEN_LENS)))
+               for _ in range(n)]
+    gaps = rng.exponential(MEAN_GAP_S, size=n)
+    arrivals = np.cumsum(gaps) - gaps[0]  # first request arrives at t=0
+    batches = [{"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (1, p)),
+                                      jnp.int32)}
+               for p, _ in lengths]
+    return batches, lengths, arrivals
+
+
+def _wait(arrival: float, t0: float) -> None:
+    dt = arrival - (time.perf_counter() - t0)
+    if dt > 0:
+        time.sleep(dt)
+
+
+def _serve_python_loop(params, cfg, batches, lengths, arrivals, max_len, t0):
+    pf, step = _prefill_fn(cfg, None), _step_fn(cfg)
+    outs = {}
+    for uid, (b, (p, g)) in enumerate(zip(batches, lengths)):
+        _wait(arrivals[uid], t0)
+        logits, pc = pf(params, b)
+        cache = M.prefill_into_cache(
+            cfg, M.init_decode_cache(cfg, 1, max_len), pc)
+        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+        toks = [int(tok[0, 0])]
+        pos0 = M.decode_pos0(cfg, p)
+        for i in range(g - 1):
+            logits, cache = step(params, cache, tok,
+                                 jnp.full((1,), pos0 + i, jnp.int32))
+            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
+            toks.append(int(tok[0, 0]))
+        outs[uid] = toks
+    return outs, {}
+
+
+def _serve_scanned(params, cfg, batches, lengths, arrivals, max_len, t0):
+    pf = _prefill_fn(cfg, None)
+    outs = {}
+    for uid, (b, (p, g)) in enumerate(zip(batches, lengths)):
+        _wait(arrivals[uid], t0)
+        logits, pc = pf(params, b)
+        cache = M.prefill_into_cache(
+            cfg, M.init_decode_cache(cfg, 1, max_len), pc)
+        e0 = jnp.argmax(logits, -1).astype(jnp.int32)
+        toks = [int(e0[0])]
+        if g > 1:
+            res = M.generate(params, cfg, cache, e0,
+                             jnp.asarray([M.decode_pos0(cfg, p)]),
+                             steps=g - 1)
+            toks += np.asarray(res["tokens"])[0][
+                np.asarray(res["valid"])[0]].tolist()
+        outs[uid] = toks
+    return outs, {}
+
+
+def _serve_continuous(params, cfg, batches, lengths, arrivals, max_len, t0,
+                      *, n_slots, seg_len):
+    eng = ServeEngine(params, cfg, n_slots=n_slots, max_len=max_len,
+                      seg_len=seg_len)
+    i, n = 0, len(batches)
+    while i < n or not eng.idle:
+        now = time.perf_counter() - t0
+        while i < n and arrivals[i] <= now:
+            eng.submit(batches[i], max_new=lengths[i][1])
+            i += 1
+        if eng.idle:
+            _wait(arrivals[i], t0)
+            continue
+        eng.step()
+    outs = {uid: c.tokens.tolist() for uid, c in eng.completions.items()}
+    util = eng.stats["live_slot_steps"] / max(eng.stats["slot_steps"], 1)
+    return outs, {"segments": eng.stats["segments"],
+                  "slot_util": round(util, 3)}
+
+
+def serving_bench(n_requests: int = 10, *, n_slots: int = 4, seg_len: int = 8,
+                  seed: int = 0, arch: str = "qwen2-moe-a2.7b", log=print):
+    """Runs the three serving modes on identical traffic; returns + writes
+    the BENCH_serve.json payload."""
+    cfg = get_config(arch, variant="reduced").replace(vocab_size=256)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batches, lengths, arrivals = _traffic(cfg, n_requests, seed)
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    total_tokens = sum(g for _, g in lengths)
+
+    modes = {
+        "python_loop": _serve_python_loop,
+        "scanned": _serve_scanned,
+        "continuous": functools.partial(_serve_continuous, n_slots=n_slots,
+                                        seg_len=seg_len),
+    }
+    results, outputs = {}, {}
+    for name, fn in modes.items():
+        fn(params, cfg, batches, lengths, arrivals, max_len,
+           time.perf_counter())  # warmup: compiles every shape variant
+        t0 = time.perf_counter()
+        outs, extra = fn(params, cfg, batches, lengths, arrivals, max_len, t0)
+        wall = time.perf_counter() - t0
+        n_tok = sum(len(v) for v in outs.values())
+        assert n_tok == total_tokens, (name, n_tok, total_tokens)
+        results[name] = {"wall_s": round(wall, 4),
+                         "tok_s": round(n_tok / wall, 2),
+                         "tokens": n_tok, **extra}
+        outputs[name] = outs
+        log(f"  {name}: {n_tok} tok in {wall:.3f}s "
+            f"({results[name]['tok_s']} tok/s)")
+
+    match = all(outputs[m] == outputs["python_loop"] for m in outputs)
+    # greedy decoding: all three paths MUST emit identical tokens —
+    # speedups for a diverging decode path would be meaningless
+    assert match, "serving modes diverged (scanned/continuous vs loop)"
+    payload = {
+        "arch": cfg.name,
+        "traffic": {"n_requests": n_requests, "prompt_lens": PROMPT_LENS,
+                    "gen_lens": GEN_LENS, "mean_gap_s": MEAN_GAP_S,
+                    "seed": seed, "total_tokens": total_tokens},
+        "engine": {"n_slots": n_slots, "seg_len": seg_len,
+                   "max_len": max_len},
+        "modes": results,
+        "outputs_match_across_modes": match,
+        "speedup_scan_vs_loop": round(
+            results["scanned"]["tok_s"] / results["python_loop"]["tok_s"], 2),
+        "speedup_cb_vs_loop": round(
+            results["continuous"]["tok_s"] / results["python_loop"]["tok_s"],
+            2),
+    }
+    out = os.path.join(os.path.dirname(__file__), "..", "BENCH_serve.json")
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    log(f"  continuous batching {payload['speedup_cb_vs_loop']}x vs "
+        f"python loop (outputs match: {match})")
+    return payload

@@ -1,8 +1,10 @@
-"""Batched serving demo: prefill + KV/SSM-cache decode on reduced configs.
+"""Continuous-batching serving demo on reduced configs.
 
-Demonstrates the same prefill/decode_step API the dry-run lowers for the
-production mesh, on CPU-sized variants of two very different families:
-an SSM (mamba2 — O(1) state) and a GQA dense model.
+Thin client of ``repro.serve.ServeEngine``: submits mixed-length
+requests for two very different families — an SSM (mamba2, O(1) state)
+and a GQA dense model — and lets the slot-based engine keep the batch
+full.  Cache grafting and the scanned decode live in the model layer
+(``prefill_into_cache`` / ``generate``); this file only builds prompts.
 
   PYTHONPATH=src python examples/serve_batched.py --arch mamba2-1.3b
 """
@@ -14,62 +16,39 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.launch.serve import mixed_lengths
 from repro.models import model as M
-
-
-def generate(cfg, params, prompts, gen_len):
-    B, P = prompts.shape
-    cap = P + gen_len + 1
-    logits, pc = jax.jit(lambda p, b: M.prefill(p, cfg, b))(
-        params, {"tokens": prompts})
-    cache = M.init_decode_cache(cfg, B, cap)
-
-    def graft(dst, src):
-        if dst.shape == src.shape:
-            return src.astype(dst.dtype)
-        for ax, (a, b) in enumerate(zip(dst.shape, src.shape)):
-            if a != b:
-                idx = [slice(None)] * dst.ndim
-                idx[ax] = slice(0, b)
-                return dst.at[tuple(idx)].set(src.astype(dst.dtype))
-        return src.astype(dst.dtype)
-
-    if cfg.arch_type in ("dense", "moe"):
-        cache["blocks"] = jax.tree.map(graft, cache["blocks"], pc["blocks"])
-        if "dense_blocks" in pc:
-            cache["dense_blocks"] = jax.tree.map(
-                graft, cache["dense_blocks"], pc["dense_blocks"])
-    elif cfg.arch_type == "ssm":
-        cache = {"blocks": pc["blocks"]}
-    step = jax.jit(lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))
-    tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-    out = [tok]
-    t0 = time.time()
-    for i in range(gen_len):
-        pos = jnp.full((B,), P + i, jnp.int32)
-        logits, cache = step(params, cache, tok, pos)
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        out.append(tok)
-    dt = time.time() - t0
-    return jnp.concatenate(out, 1), B * gen_len / dt
+from repro.serve import ServeEngine
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="mamba2-1.3b")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=24)
+    ap.add_argument("--seg-len", type=int, default=8)
     args = ap.parse_args()
     cfg = get_config(args.arch, variant="reduced").replace(vocab_size=512)
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     rng = np.random.default_rng(0)
-    prompts = jnp.asarray(
-        rng.integers(0, cfg.vocab_size, (args.batch, args.prompt_len)),
-        jnp.int32)
-    gen, tps = generate(cfg, params, prompts, args.gen)
-    print(f"{args.arch}: generated {gen.shape} at {tps:.1f} tok/s")
-    print("first sequence:", np.asarray(gen[0])[:16])
+
+    lengths = mixed_lengths(args.requests, args.prompt_len, args.gen)
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    engine = ServeEngine(params, cfg, n_slots=args.slots, max_len=max_len,
+                         seg_len=args.seg_len)
+    for p, g in lengths:
+        prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, p)),
+                             jnp.int32)
+        engine.submit({"tokens": prompt}, max_new=g)
+    t0 = time.time()
+    comps = engine.run()
+    dt = time.time() - t0
+    n_tok = engine.stats["generated_tokens"]
+    print(f"{args.arch}: {len(comps)} requests, {n_tok} tokens "
+          f"at {n_tok / dt:.1f} tok/s")
+    print("first sequence:", comps[min(comps)].tokens[:16])
 
 
 if __name__ == "__main__":

@@ -1,7 +1,14 @@
-"""Serving launcher: batched prefill + decode with a KV/SSM cache.
+"""Serving launcher: continuous-batching engine over every arch family.
+
+Thin client of ``repro.serve.ServeEngine`` — prefill grafting, the
+scanned decode loop and slot admission all live in the engine / model
+layer.  All six families run, including encdec (whisper: stub audio
+frames feed the encoder, the decoder prompt is served like any other).
 
   PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b \
-      --variant reduced --batch 4 --prompt-len 32 --gen 16
+      --variant reduced --requests 4 --prompt-len 32 --gen 16
+  PYTHONPATH=src python -m repro.launch.serve --arch whisper-small \
+      --variant reduced --requests 3 --mixed
 """
 from __future__ import annotations
 
@@ -15,86 +22,84 @@ import numpy as np
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
+from repro.serve import Greedy, ServeEngine, Temperature, TopK
 
 
-def pad_cache_to(cache, prefill_caches):
-    """Copy prefill cache entries (length S_p) into a larger decode cache.
+def mixed_lengths(n: int, prompt_len: int, gen: int):
+    """Demo traffic: request i gets a shorter prompt + generation."""
+    return [(max(4, prompt_len - 4 * i), max(2, gen - 3 * i))
+            for i in range(n)]
 
-    Exactly one dim (the sequence axis) may differ between the decode
-    and prefill entries; anything else is a caller bug and raises.
-    """
-    def copy(dst, src):
-        if dst.shape == src.shape:
-            return src.astype(dst.dtype)
-        diff = [ax for ax, (a, b) in enumerate(zip(dst.shape, src.shape))
-                if a != b]
-        if dst.ndim != src.ndim or len(diff) != 1:
-            raise ValueError(
-                f"pad_cache_to: decode cache {dst.shape} and prefill cache "
-                f"{src.shape} differ in more than one dim — the caches were "
-                f"built for different batch/model shapes")
-        idx = [slice(None)] * dst.ndim
-        idx[diff[0]] = slice(0, src.shape[diff[0]])
-        return dst.at[tuple(idx)].set(src.astype(dst.dtype))
 
-    return jax.tree.map(copy, cache, prefill_caches)
+def prompt_batch(cfg, rng, prompt_len: int):
+    """A leading-dim-1 prefill batch for any arch family."""
+    toks = rng.integers(0, cfg.vocab_size, (1, prompt_len))
+    batch = {"tokens": jnp.asarray(toks, jnp.int32)}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.arch_type == "vlm":
+        batch["patches"] = jnp.asarray(
+            rng.normal(size=(1, cfg.frontend_tokens, cfg.d_model)) * 0.05, dt)
+    if cfg.arch_type == "encdec":
+        batch["frames"] = jnp.asarray(
+            rng.normal(size=(1, cfg.frontend_tokens, cfg.d_model)) * 0.05, dt)
+    return batch
+
+
+def pick_sampler(args):
+    if args.top_k:
+        return TopK(args.top_k, args.temperature or 1.0)
+    if args.temperature:
+        return Temperature(args.temperature)
+    return Greedy()
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--variant", default="reduced")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--seg-len", type=int, default=8)
     ap.add_argument("--vocab", type=int, default=512)
+    ap.add_argument("--mixed", action="store_true",
+                    help="vary prompt/gen length per request")
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, variant=args.variant)
     if args.variant == "reduced":
         cfg = cfg.replace(vocab_size=args.vocab)
-    if cfg.arch_type == "encdec":
-        raise SystemExit("use whisper decode via examples/serve_batched.py")
     mesh = make_host_mesh()
-    B, P, G = args.batch, args.prompt_len, args.gen
-    cap = P + G + 1
+    rng = np.random.default_rng(0)
+
+    P, G = args.prompt_len, args.gen
+    if args.mixed:
+        lengths = mixed_lengths(args.requests, P, G)
+    else:
+        lengths = [(P, G)] * args.requests
+    # caches sized exactly: prompt + max_new (+ VLM patch offset), no +1
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
 
     params = M.init_params(jax.random.PRNGKey(0), cfg)
-    rng = np.random.default_rng(0)
-    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (B, P)), jnp.int32)
-    batch = {"tokens": prompt}
-    if cfg.arch_type == "vlm":
-        batch["patches"] = jnp.zeros((B, cfg.frontend_tokens, cfg.d_model),
-                                     jnp.dtype(cfg.dtype))
-
     with mesh:
+        engine = ServeEngine(params, cfg, n_slots=args.slots, max_len=max_len,
+                             sampler=pick_sampler(args), seg_len=args.seg_len,
+                             mesh=mesh)
+        for p, g in lengths:
+            engine.submit(prompt_batch(cfg, rng, p), max_new=g)
         t0 = time.time()
-        logits, pc = jax.jit(lambda p, b: M.prefill(p, cfg, b))(params, batch)
-        print(f"prefill: {B}x{P} in {time.time()-t0:.2f}s")
-        cache = M.init_decode_cache(cfg, B, cap)
-        # align prefill cache into the decode cache (attn-cache archs)
-        if cfg.arch_type in ("dense", "moe", "vlm"):
-            cache["blocks"] = pad_cache_to(cache["blocks"], pc["blocks"])
-            if "dense_blocks" in pc:
-                cache["dense_blocks"] = pad_cache_to(
-                    cache["dense_blocks"], pc["dense_blocks"])
-        elif cfg.arch_type == "ssm":
-            cache = {"blocks": pc["blocks"]}
-        step = jax.jit(lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))
-        tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-        offset = cfg.frontend_tokens if cfg.arch_type == "vlm" else 0
-        out_tokens = [tok]
-        t0 = time.time()
-        for i in range(G):
-            pos = jnp.full((B,), offset + P + i, jnp.int32)
-            logits, cache = step(params, cache, tok, pos)
-            tok = jnp.argmax(logits, -1)[:, None].astype(jnp.int32)
-            out_tokens.append(tok)
+        comps = engine.run()
         dt = time.time() - t0
-        gen = jnp.concatenate(out_tokens, 1)
-        print(f"decode: {G} steps x {B} batch in {dt:.2f}s "
-              f"({B*G/dt:.1f} tok/s)")
-        print("sample:", np.asarray(gen[0])[:16])
+    n_tok = engine.stats["generated_tokens"]
+    util = (engine.stats["live_slot_steps"] / max(engine.stats["slot_steps"], 1))
+    print(f"{args.arch}: {len(comps)} requests, {n_tok} tokens in {dt:.2f}s "
+          f"({n_tok / dt:.1f} tok/s, {engine.stats['segments']} segments, "
+          f"slot util {util:.0%})")
+    first = comps[min(comps)]
+    print("sample:", first.tokens[:16])
 
 
 if __name__ == "__main__":

@@ -523,7 +523,10 @@ def _encdec_backbone(params, cfg: ModelConfig, batch, *, mesh, collect_cache,
             xx = xx + xa.reshape(B, S, -1) @ bp["xattn"]["wo"]
             h = layers.apply_norm(bp["ln2"], xx)
             xx = xx + layers.apply_mlp(bp["mlp"], cfg, h)
-            return xx, {"self": kv, "cross": {"k": mk, "v": mv}}
+            # dict layout matches init_decode_cache so prefill_into_cache
+            # can graft the decoder self-KV (kv is attention_full's tuple)
+            return xx, {"self": {"k": kv[0], "v": kv[1]},
+                        "cross": {"k": mk, "v": mv}}
         if cfg.remat:
             fn = jax.checkpoint(fn)
         xx, c = fn(x)
@@ -682,6 +685,132 @@ def init_decode_cache(cfg: ModelConfig, B: int, S: int):
     raise ValueError(at)
 
 
+def decode_offset(cfg: ModelConfig) -> int:
+    """Leading cache positions occupied by the modality frontend.
+
+    VLM prompts are ``[patches | text]``: the prefill cache stores patch
+    rows first, so text decode positions start at ``frontend_tokens``.
+    Every other family decodes from position ``prompt_len`` directly
+    (the encdec frontend lives in the separate cross/memory entries).
+    """
+    return cfg.frontend_tokens if cfg.arch_type == "vlm" else 0
+
+
+def decode_capacity(cfg: ModelConfig, prompt_len: int, max_new: int) -> int:
+    """Exact decode-cache capacity for a prompt + ``max_new`` generated
+    tokens (the first of which is sampled from the prefill logits)."""
+    return decode_offset(cfg) + prompt_len + max_new
+
+
+def decode_pos0(cfg: ModelConfig, prompt_len: int) -> int:
+    """First decode position after a ``prompt_len``-token prefill."""
+    return decode_offset(cfg) + prompt_len
+
+
+def graft_cache_entry(dst, src):
+    """Copy a prefill cache entry into a (same-or-larger) decode entry.
+
+    Exactly one dim (the sequence axis) may differ between the decode
+    and prefill entries; anything else is a caller bug and raises.
+    """
+    if dst.shape == src.shape:
+        return src.astype(dst.dtype)
+    diff = [ax for ax, (a, b) in enumerate(zip(dst.shape, src.shape))
+            if a != b]
+    if dst.ndim != src.ndim or len(diff) != 1:
+        raise ValueError(
+            f"graft_cache_entry: decode cache {dst.shape} and prefill cache "
+            f"{src.shape} differ in more than one dim — the caches were "
+            f"built for different batch/model shapes")
+    ax = diff[0]
+    if src.shape[ax] > dst.shape[ax]:
+        raise ValueError(
+            f"graft_cache_entry: prefill length {src.shape[ax]} exceeds "
+            f"decode cache capacity {dst.shape[ax]} (axis {ax})")
+    idx = [slice(None)] * dst.ndim
+    idx[ax] = slice(0, src.shape[ax])
+    return dst.at[tuple(idx)].set(src.astype(dst.dtype))
+
+
+def prefill_into_cache(cfg: ModelConfig, decode_cache, prefill_cache):
+    """Align a ``prefill`` cache into a ``decode_step`` cache.
+
+    The ONE place that knows the cache layout per arch family:
+
+      dense/moe : graft ``blocks`` (+ leading ``dense_blocks``) along the
+                  sequence axis of each stacked KV / MLA-latent entry.
+      vlm       : same — the prefill entries already contain the patch
+                  rows, so the graft lands on ``[0, frontend_tokens + P)``
+                  and decode positions continue at ``decode_pos0``.
+      ssm       : recurrent state/conv tails are position-free; adopt.
+      hybrid    : adopt mamba state; graft the per-group shared-attn KV;
+                  fold the separately-stored ``tail_attn`` entry into the
+                  last row of the stacked ``attn`` cache.
+      encdec    : graft decoder ``self`` KV; adopt the fixed-length
+                  ``cross`` KV and encoder ``memory``.
+    """
+    at = cfg.arch_type
+    if at in ("dense", "moe", "vlm"):
+        out = {"blocks": jax.tree.map(graft_cache_entry,
+                                      decode_cache["blocks"],
+                                      prefill_cache["blocks"])}
+        if "dense_blocks" in decode_cache:
+            out["dense_blocks"] = jax.tree.map(graft_cache_entry,
+                                               decode_cache["dense_blocks"],
+                                               prefill_cache["dense_blocks"])
+        return out
+    if at == "ssm":
+        return jax.tree.map(graft_cache_entry, decode_cache, prefill_cache)
+    if at == "hybrid":
+        pc = {k: v for k, v in prefill_cache.items() if v is not None}
+        out = {"mamba": jax.tree.map(graft_cache_entry,
+                                     decode_cache["mamba"], pc["mamba"])}
+        has_tail = "tail" in decode_cache
+        if has_tail:
+            n_groups = jax.tree.leaves(pc["attn"])[0].shape[0]
+
+            def fold(dst, src, tail):
+                body = graft_cache_entry(dst[:n_groups], src)
+                return dst.at[:n_groups].set(body).at[-1].set(
+                    graft_cache_entry(dst[-1], tail))
+
+            out["attn"] = jax.tree.map(fold, decode_cache["attn"],
+                                       pc["attn"], pc["tail_attn"])
+            out["tail"] = jax.tree.map(graft_cache_entry,
+                                       decode_cache["tail"], pc["tail"])
+        else:
+            out["attn"] = jax.tree.map(graft_cache_entry,
+                                       decode_cache["attn"], pc["attn"])
+        return out
+    if at == "encdec":
+        return {"self": jax.tree.map(graft_cache_entry,
+                                     decode_cache["self"],
+                                     prefill_cache["self"]),
+                "cross": jax.tree.map(graft_cache_entry,
+                                      decode_cache["cross"],
+                                      prefill_cache["cross"]),
+                "memory": graft_cache_entry(decode_cache["memory"],
+                                            prefill_cache["memory"])}
+    raise ValueError(at)
+
+
+def decode_cache_batch_axes(cfg: ModelConfig):
+    """Tree of the batch-axis index of every decode-cache leaf.
+
+    The batch axis sits behind a varying number of stacked layer axes
+    (e.g. hybrid mamba state is (groups, period, B, ...)); discover it by
+    diffing two abstract caches that differ only in B.
+    """
+    a = jax.eval_shape(lambda: init_decode_cache(cfg, 2, 8))
+    b = jax.eval_shape(lambda: init_decode_cache(cfg, 3, 8))
+
+    def axis(x, y):
+        return next(i for i, (p, q) in enumerate(zip(x.shape, y.shape))
+                    if p != q)
+
+    return jax.tree.map(axis, a, b)
+
+
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, mesh=None):
     """One serving step: tokens (B, 1) at positions pos (B,).
 
@@ -779,3 +908,89 @@ def _encdec_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh):
     x, nsc = _scan(cfg, body, x, (params["dec_blocks"], cache["self"],
                                   cache["cross"]))
     return x, {"self": nsc, "cross": cache["cross"], "memory": cache["memory"]}
+
+
+# ---------------------------------------------------------------------------
+# serving: scanned generation
+# ---------------------------------------------------------------------------
+
+def greedy_sample(keys, logits):
+    """Default sampler: per-slot argmax.  keys (B, 2) ignored."""
+    del keys
+    return jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+@functools.lru_cache(maxsize=None)
+def _generate_fn(cfg: ModelConfig, steps: int, sampler, return_logits: bool,
+                 mesh):
+    """Compiled scanned-decode body, cached per (cfg, steps, sampler).
+
+    ``sampler`` must be hashable (module-level function or frozen
+    dataclass instance, see repro/serve/sampling.py).  The cache operand
+    is donated: one host dispatch runs ``steps`` decode steps.
+    """
+
+    def run(params, cache, tok, pos, rem, done, keys, eos):
+        def body(carry, _):
+            tok, pos, rem, done, keys, cache = carry
+            logits, cache = decode_step(params, cfg, cache, tok[:, None], pos,
+                                        mesh=mesh)
+            ks = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+            sampled = sampler(ks[:, 0], logits)
+            live = ~done
+            rem2 = rem - live.astype(rem.dtype)
+            done2 = done | (live & ((sampled == eos) | (rem2 <= 0)))
+            tok2 = jnp.where(live, sampled, tok)
+            # finished slots stop advancing: their (stale) writes pin to
+            # one in-capacity position until the slot is re-admitted
+            pos2 = jnp.where(live, pos + 1, pos)
+            out = (sampled, live, logits) if return_logits else (sampled, live)
+            return (tok2, pos2, rem2, done2, ks[:, 1], cache), out
+
+        carry, ys = jax.lax.scan(body, (tok, pos, rem, done, keys, cache),
+                                 None, length=steps)
+        tok, pos, rem, done, keys, cache = carry
+        res = {"tokens": ys[0].T, "valid": ys[1].T, "next_tok": tok,
+               "pos": pos, "remaining": rem, "done": done, "rng": keys,
+               "cache": cache}
+        if return_logits:
+            res["logits"] = jnp.moveaxis(ys[2], 0, 1)
+        return res
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+def generate(params, cfg: ModelConfig, cache, first_tok, pos0, *, steps: int,
+             sampler=None, rng=None, eos_id=None, remaining=None, mesh=None,
+             return_logits: bool = False):
+    """Run ``steps`` decode steps as ONE ``lax.scan`` dispatch.
+
+    ``first_tok`` (B,) or (B, 1) is the token fed at ``pos0`` (B,) —
+    normally the sampler applied to the prefill logits, so it is already
+    emission #1 of the request; the scan emits ``steps`` more.  The
+    decode cache is donated to the compiled scan.
+
+    Per-slot engine state rides through the scan carry: ``remaining``
+    (emissions still allowed; slots with 0 start done and only produce
+    discarded garbage), ``eos_id`` stopping, and per-slot RNG ``rng``
+    (B, 2) split once per step regardless of slot liveness, so a scan
+    split into segments samples identically to one long scan.
+
+    Returns a dict with ``tokens``/``valid`` (B, steps), the carried
+    ``next_tok``/``pos``/``remaining``/``done``/``rng``, the updated
+    ``cache``, and (when ``return_logits``) the raw per-step ``logits``
+    (B, steps, V) — bit-identical to a per-token ``decode_step`` loop.
+    """
+    if sampler is None:
+        sampler = greedy_sample
+    B = first_tok.shape[0]
+    tok = jnp.asarray(first_tok).reshape(B).astype(jnp.int32)
+    pos0 = jnp.asarray(pos0).reshape(B).astype(jnp.int32)
+    if rng is None:
+        rng = jax.random.split(jax.random.PRNGKey(0), B)
+    if remaining is None:
+        remaining = jnp.full((B,), steps, jnp.int32)
+    remaining = jnp.asarray(remaining).reshape(B).astype(jnp.int32)
+    eos = jnp.int32(-1 if eos_id is None else eos_id)
+    fn = _generate_fn(cfg, int(steps), sampler, bool(return_logits), mesh)
+    return fn(params, cache, tok, pos0, remaining, remaining <= 0, rng, eos)

@@ -1,0 +1,6 @@
+"""Serving engine: continuous-batching generation over every arch family."""
+from repro.serve.engine import Completion, Request, ServeEngine
+from repro.serve.sampling import Greedy, Temperature, TopK
+
+__all__ = ["Completion", "Greedy", "Request", "ServeEngine", "Temperature",
+           "TopK"]

@@ -1,0 +1,246 @@
+"""Slot-based continuous-batching generation engine.
+
+The engine owns ONE fixed-shape decode cache of ``n_slots`` batch rows
+and ``max_len`` positions and serves a queue of variable-length requests
+through it:
+
+  admit    : prefill a queued request at B=1, graft its cache into a
+             free slot (``prefill_into_cache`` + a per-slot scatter),
+             sample emission #1 from the prefill logits.
+  segment  : ONE compiled ``lax.scan`` of ``seg_len`` decode steps over
+             the whole batch (``models.model.generate``), per-slot
+             position / remaining-length / EOS state carried through the
+             scan.  Finished slots keep running as masked garbage until
+             the segment ends — shapes never change, nothing recompiles.
+  between  : finished slots are freed and refilled from the queue, so
+             mixed-length traffic keeps the batch full instead of
+             padding every request to the longest one.
+
+Slot independence: attention/SSM state and (single-device) MoE routing
+never mix batch rows, so a request's tokens are identical to a solo run
+with the same per-request PRNG key (tests/test_serve_engine.py asserts
+this).  Caveat: the multi-device ``moe_a2a`` path computes expert
+capacity over ALL batch rows, so freed garbage lanes could crowd live
+tokens out of an expert there — sharded decode is a ROADMAP follow-on
+and needs live-token-masked routing first.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from collections import deque
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serve.sampling import Greedy
+
+
+@dataclasses.dataclass
+class Request:
+    """One generation request.  ``batch`` is a leading-dim-1 prefill
+    batch (``tokens`` plus ``patches``/``frames`` for vlm/encdec);
+    ``max_new`` counts ALL generated tokens, including the one sampled
+    from the prefill logits."""
+    uid: int
+    batch: Dict[str, Any]
+    max_new: int
+    key: Optional[Any] = None  # per-request PRNG key (seeded from uid if None)
+
+    @property
+    def prompt_len(self) -> int:
+        return self.batch["tokens"].shape[1]
+
+
+@dataclasses.dataclass
+class Completion:
+    uid: int
+    prompt_len: int
+    tokens: np.ndarray     # (n_generated,) — includes the EOS token if hit
+    n_segments: int        # decode segments this request rode through
+
+
+@functools.lru_cache(maxsize=None)
+def _prefill_fn(cfg: ModelConfig, mesh):
+    return jax.jit(lambda p, b: M.prefill(p, cfg, b, mesh=mesh))
+
+
+@functools.lru_cache(maxsize=None)
+def _admit_fn(cfg: ModelConfig, max_len: int):
+    """Jitted admission: graft a B=1 prefill cache and scatter it into
+    row ``slot`` of the engine's batched cache, fused into ONE dispatch
+    (batch axis per leaf from ``decode_cache_batch_axes``; the batched
+    cache is donated).  Recompiles per prompt shape, like prefill."""
+    axes = M.decode_cache_batch_axes(cfg)
+
+    def admit(cache, pc, slot):
+        sub = M.prefill_into_cache(
+            cfg, M.init_decode_cache(cfg, 1, max_len), pc)
+
+        def put(dst, src, ax):
+            idx = [slice(None)] * dst.ndim
+            idx[ax] = slot
+            return dst.at[tuple(idx)].set(
+                jnp.take(src, 0, axis=ax).astype(dst.dtype))
+
+        return jax.tree.map(put, cache, sub, axes)
+
+    return jax.jit(admit, donate_argnums=(0,))
+
+
+class ServeEngine:
+    """Continuous-batching engine over a fixed ``(n_slots, max_len)``
+    decode cache.  ``submit()`` requests, then ``run()`` (or ``step()``
+    segment-by-segment for external admission control)."""
+
+    def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
+                 max_len: int = 128, sampler=None, eos_id: Optional[int] = None,
+                 seg_len: int = 8, mesh=None, seed: int = 0):
+        cfg.validate()
+        self.params, self.cfg = params, cfg
+        self.n_slots, self.max_len, self.seg_len = n_slots, max_len, seg_len
+        self.sampler = sampler if sampler is not None else Greedy()
+        self.eos_id, self.mesh = eos_id, mesh
+        self.cache = M.init_decode_cache(cfg, n_slots, max_len)
+        self._base_key = jax.random.PRNGKey(seed)
+        # per-slot host state
+        self.tok = np.zeros((n_slots,), np.int32)
+        self.pos = np.zeros((n_slots,), np.int32)
+        self.rem = np.zeros((n_slots,), np.int32)
+        self.keys = np.array(jax.random.split(self._base_key, n_slots))
+        self.slot_uid = np.full((n_slots,), -1, np.int64)
+        self.queue: deque = deque()
+        self.completions: Dict[int, Completion] = {}
+        self.history: List[Tuple[int, int, int]] = []  # (segment, slot, uid)
+        self.segment_idx = 0
+        self.stats = {"generated_tokens": 0, "segments": 0, "prefills": 0,
+                      "slot_steps": 0, "live_slot_steps": 0}
+        self._out: Dict[int, list] = {}
+        self._plen: Dict[int, int] = {}
+        self._nseg: Dict[int, int] = {}
+        self._uid_auto = 0
+
+    # -- request intake ----------------------------------------------------
+
+    def submit(self, batch, *, max_new: int, uid: Optional[int] = None,
+               key=None) -> int:
+        if uid is None:
+            uid = self._uid_auto
+            self._uid_auto += 1
+        else:
+            self._uid_auto = max(self._uid_auto, uid + 1)
+        if uid in self.completions or uid in self._out or \
+                any(r.uid == uid for r in self.queue):
+            raise ValueError(f"request uid {uid} already in use")
+        bad = [k for k, v in batch.items() if v.shape[0] != 1]
+        if bad:
+            raise ValueError(
+                f"request {uid}: batch entries {bad} must have leading dim 1 "
+                f"(one request per submit)")
+        P = batch["tokens"].shape[1]
+        need = M.decode_capacity(self.cfg, P, max_new)
+        if need > self.max_len:
+            raise ValueError(
+                f"request {uid}: prompt {P} + max_new {max_new} needs cache "
+                f"capacity {need} > engine max_len {self.max_len}")
+        if max_new < 1:
+            raise ValueError(f"request {uid}: max_new must be >= 1")
+        self.queue.append(Request(uid, batch, max_new, key))
+        return uid
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and not (self.slot_uid >= 0).any()
+
+    # -- admission ---------------------------------------------------------
+
+    def _finish(self, uid: int) -> None:
+        self.completions[uid] = Completion(
+            uid, self._plen.pop(uid),
+            np.asarray(self._out.pop(uid), np.int32), self._nseg.pop(uid))
+
+    def _admit(self) -> None:
+        free = [s for s in range(self.n_slots) if self.slot_uid[s] < 0]
+        while free and self.queue:
+            req = self.queue.popleft()
+            logits, pc = _prefill_fn(self.cfg, self.mesh)(self.params,
+                                                          req.batch)
+            key = req.key if req.key is not None else \
+                jax.random.fold_in(self._base_key, req.uid)
+            key, k0 = jax.random.split(key)
+            e0 = int(np.asarray(self.sampler(k0[None], logits))[0])
+            self._out[req.uid] = [e0]
+            self._plen[req.uid] = req.prompt_len
+            self._nseg[req.uid] = 0
+            self.stats["prefills"] += 1
+            self.stats["generated_tokens"] += 1
+            if req.max_new <= 1 or (self.eos_id is not None
+                                    and e0 == self.eos_id):
+                self._finish(req.uid)  # done at prefill: no slot needed,
+                continue               # skip the cache graft entirely
+            slot = free.pop(0)
+            self.cache = _admit_fn(self.cfg, self.max_len)(self.cache, pc,
+                                                           slot)
+            self.slot_uid[slot] = req.uid
+            self.tok[slot] = e0
+            self.pos[slot] = M.decode_pos0(self.cfg, req.prompt_len)
+            self.rem[slot] = req.max_new - 1
+            self.keys[slot] = np.asarray(key)
+
+    # -- scanned decode segment --------------------------------------------
+
+    def _segment(self) -> None:
+        res = M.generate(self.params, self.cfg, self.cache,
+                         jnp.asarray(self.tok), jnp.asarray(self.pos),
+                         steps=self.seg_len, sampler=self.sampler,
+                         rng=jnp.asarray(self.keys), eos_id=self.eos_id,
+                         remaining=jnp.asarray(self.rem), mesh=self.mesh)
+        self.cache = res["cache"]
+        toks, valid = np.asarray(res["tokens"]), np.asarray(res["valid"])
+        done = np.asarray(res["done"])
+        # writable copies — _admit() mutates these per slot
+        self.tok = np.array(res["next_tok"])
+        self.pos = np.array(res["pos"])
+        self.rem = np.array(res["remaining"])
+        self.keys = np.array(res["rng"])
+        for s in range(self.n_slots):
+            uid = int(self.slot_uid[s])
+            if uid < 0:
+                continue
+            self.history.append((self.segment_idx, s, uid))
+            new = toks[s][valid[s]].tolist()
+            self._out[uid].extend(new)
+            self._nseg[uid] += 1
+            self.stats["generated_tokens"] += len(new)
+            self.stats["live_slot_steps"] += len(new)
+            if done[s]:
+                self._finish(uid)
+                self.slot_uid[s] = -1
+                # EOS can finish a slot with budget left: zero it so the
+                # freed lane runs masked (done = rem<=0) until re-admitted
+                self.rem[s] = 0
+        self.stats["slot_steps"] += self.n_slots * self.seg_len
+        self.stats["segments"] += 1
+        self.segment_idx += 1
+
+    # -- driving -----------------------------------------------------------
+
+    def step(self) -> None:
+        """Admit waiting requests, then run one decode segment."""
+        self._admit()
+        if (self.slot_uid >= 0).any():
+            self._segment()
+
+    def run(self) -> Dict[int, Completion]:
+        """Drain the queue: segments with admission in between."""
+        t0 = time.perf_counter()
+        while not self.idle:
+            self.step()
+        self.stats["wall_s"] = (self.stats.get("wall_s", 0.0)
+                                + time.perf_counter() - t0)
+        return self.completions

@@ -1,0 +1,58 @@
+"""Per-slot token samplers for the serving engine.
+
+A sampler maps ``(keys, logits) -> tokens`` with per-slot PRNG keys
+``(B, 2)`` and logits ``(B, V)`` (f32), returning ``(B,)`` int32 token
+ids.  Samplers are **hashable frozen dataclasses**: the compiled scanned
+decode (``models.model._generate_fn``) is cached per sampler instance,
+so two engines with the same sampler share one executable.
+
+Greedy ignores its keys; Temperature/TopK consume one key per slot per
+step — the engine splits each slot's key stream once per decode step
+whether or not the slot is live, so a scan cut into segments samples
+exactly like one long scan.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Greedy:
+    """Deterministic argmax decoding."""
+
+    def __call__(self, keys, logits):
+        del keys
+        return jnp.argmax(logits, -1).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class Temperature:
+    """Sample from softmax(logits / t) with a per-slot key."""
+
+    t: float = 1.0
+
+    def __call__(self, keys, logits):
+        t = max(self.t, 1e-6)
+        return jax.vmap(
+            lambda k, l: jax.random.categorical(k, l / t)
+        )(keys, logits).astype(jnp.int32)
+
+
+@dataclasses.dataclass(frozen=True)
+class TopK:
+    """Restrict to the k most likely tokens, then temperature-sample."""
+
+    k: int = 40
+    t: float = 1.0
+
+    def __call__(self, keys, logits):
+        t = max(self.t, 1e-6)
+
+        def one(key, l):
+            vals, idx = jax.lax.top_k(l, self.k)
+            return idx[jax.random.categorical(key, vals / t)]
+
+        return jax.vmap(one)(keys, logits).astype(jnp.int32)

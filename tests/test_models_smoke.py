@@ -86,40 +86,7 @@ def test_decode_matches_forward(arch):
 
     # prefill on S-1 tokens, then one decode step for token S-1
     logits_p, pc = M.prefill(params, cfg, {"tokens": toks[:, :S - 1]})
-    cache = M.init_decode_cache(cfg, B, S)
-
-    def graft(dst, src):
-        if dst.shape == src.shape:
-            return src.astype(dst.dtype)
-        for ax, (a, b) in enumerate(zip(dst.shape, src.shape)):
-            if a != b:
-                idx = [slice(None)] * dst.ndim
-                idx[ax] = slice(0, b)
-                return dst.at[tuple(idx)].set(src.astype(dst.dtype))
-        return src.astype(dst.dtype)
-
-    if cfg.arch_type in ("dense", "moe"):
-        cache["blocks"] = jax.tree.map(graft, cache["blocks"], pc["blocks"])
-        if "dense_blocks" in pc and "dense_blocks" in cache:
-            cache["dense_blocks"] = jax.tree.map(
-                graft, cache["dense_blocks"], pc["dense_blocks"])
-    elif cfg.arch_type == "ssm":
-        cache = {"blocks": pc["blocks"]}
-    elif cfg.arch_type == "hybrid":
-        n_groups = jax.tree.leaves(params["mamba_groups"])[0].shape[0]
-        attn = jax.tree.map(graft, cache["attn"],
-                            jax.tree.map(lambda t: t, pc["attn"]))
-        cache["attn"] = attn
-        cache["mamba"] = pc["mamba"]
-        if "tail" in cache:
-            cache["tail"] = pc["tail"]
-            # tail attention cache is the last entry of cache["attn"]:
-            # prefill stores it separately
-            tail_kv = pc["tail_attn"]
-            cache["attn"] = jax.tree.map(
-                lambda full, t: full.at[-1].set(
-                    graft(full[-1], t).astype(full.dtype)),
-                cache["attn"], tail_kv)
+    cache = M.prefill_into_cache(cfg, M.init_decode_cache(cfg, B, S), pc)
 
     pos = jnp.full((B,), S - 1, jnp.int32)
     logits_d, _ = M.decode_step(params, cfg, cache, toks[:, S - 1:S], pos)
@@ -142,21 +109,9 @@ def test_vlm_decode_matches_forward():
 
     logits_p, pc = M.prefill(params, cfg,
                              {"tokens": toks[:, :S - 1], "patches": patches})
-    cap = P + S
-    cache = M.init_decode_cache(cfg, B, cap)
-
-    def graft(dst, src):
-        if dst.shape == src.shape:
-            return src.astype(dst.dtype)
-        for ax, (a, b) in enumerate(zip(dst.shape, src.shape)):
-            if a != b:
-                idx = [slice(None)] * dst.ndim
-                idx[ax] = slice(0, b)
-                return dst.at[tuple(idx)].set(src.astype(dst.dtype))
-        return src.astype(dst.dtype)
-
-    cache["blocks"] = jax.tree.map(graft, cache["blocks"], pc["blocks"])
-    pos = jnp.full((B,), P + S - 1, jnp.int32)
+    cap = M.decode_capacity(cfg, S - 1, 1)  # == P + S, patch offset included
+    cache = M.prefill_into_cache(cfg, M.init_decode_cache(cfg, B, cap), pc)
+    pos = jnp.full((B,), M.decode_pos0(cfg, S - 1), jnp.int32)
     logits_d, _ = M.decode_step(params, cfg, cache, toks[:, S - 1:S], pos)
     np.testing.assert_allclose(np.asarray(logits_d), np.asarray(ref_logits),
                                rtol=2e-3, atol=2e-3)

@@ -1,0 +1,207 @@
+"""Serving-engine tests: scanned decode equivalence + slot admission.
+
+Covers (ISSUE 3):
+  * scanned ``generate`` is bit-identical to the per-token Python
+    decode loop for one arch per cache family (dense/moe, ssm, hybrid,
+    vlm, encdec);
+  * slot-admission properties: no slot serves two requests within one
+    segment, freed slots are refilled, per-slot outputs equal solo runs;
+  * EOS stopping and segment-length-invariant sampling.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import Greedy, ServeEngine, Temperature
+
+# one arch per decode-cache family
+FAMILY_ARCHS = [
+    "qwen2-moe-a2.7b",   # dense/moe: stacked KV blocks
+    "mamba2-1.3b",       # ssm: recurrent state + conv tail
+    "zamba2-7b",         # hybrid: shared-attn KV + mamba groups
+    "paligemma-3b",      # vlm: patch-offset KV
+    "whisper-small",     # encdec: self KV + fixed cross/memory
+]
+
+
+def family_batch(cfg, B, P, seed=3):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (B, P), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.arch_type == "vlm":
+        batch["patches"] = (jax.random.normal(
+            jax.random.PRNGKey(seed + 1),
+            (B, cfg.frontend_tokens, cfg.d_model)) * 0.05).astype(dt)
+    if cfg.arch_type == "encdec":
+        batch["frames"] = (jax.random.normal(
+            jax.random.PRNGKey(seed + 1),
+            (B, cfg.frontend_tokens, cfg.d_model)) * 0.05).astype(dt)
+    return batch
+
+
+@pytest.mark.parametrize("arch", FAMILY_ARCHS)
+def test_generate_bit_identical_to_python_loop(arch):
+    cfg = get_config(arch, variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    B, P, G = 2, 8, 4
+    batch = family_batch(cfg, B, P)
+    logits0, pc = M.prefill(params, cfg, batch)
+    cap = M.decode_capacity(cfg, P, G + 1)
+    pos0 = M.decode_pos0(cfg, P)
+
+    # reference: per-token Python loop, one jit dispatch per step
+    cache = M.prefill_into_cache(cfg, M.init_decode_cache(cfg, B, cap), pc)
+    step = jax.jit(lambda p, c, t, pos: M.decode_step(p, cfg, c, t, pos))
+    tok = jnp.argmax(logits0, -1)[:, None].astype(jnp.int32)
+    loop_toks, loop_logits = [], []
+    for i in range(G):
+        lg, cache = step(params, cache, tok,
+                         jnp.full((B,), pos0 + i, jnp.int32))
+        tok = jnp.argmax(lg, -1)[:, None].astype(jnp.int32)
+        loop_toks.append(np.asarray(tok[:, 0]))
+        loop_logits.append(np.asarray(lg))
+
+    # scanned: the whole loop as one dispatch
+    cache = M.prefill_into_cache(cfg, M.init_decode_cache(cfg, B, cap), pc)
+    res = M.generate(params, cfg, cache, jnp.argmax(logits0, -1),
+                     jnp.full((B,), pos0), steps=G, return_logits=True)
+    np.testing.assert_array_equal(np.asarray(res["tokens"]),
+                                  np.stack(loop_toks, 1))
+    np.testing.assert_array_equal(np.asarray(res["logits"]),
+                                  np.stack(loop_logits, 1))  # bit-identical
+    assert np.asarray(res["valid"]).all()
+
+
+def _solo_tokens(params, cfg, batch, g, max_len, uid, base_key,
+                 sampler=Greedy()):
+    """Reference: serve one request alone through prefill + generate,
+    with the engine's per-request key protocol."""
+    P = batch["tokens"].shape[1]
+    logits, pc = M.prefill(params, cfg, batch)
+    cache = M.prefill_into_cache(cfg, M.init_decode_cache(cfg, 1, max_len), pc)
+    key = jax.random.fold_in(base_key, uid)
+    key, k0 = jax.random.split(key)
+    e0 = int(np.asarray(sampler(k0[None], logits))[0])
+    toks = [e0]
+    if g > 1:
+        res = M.generate(params, cfg, cache, jnp.asarray([e0]),
+                         jnp.asarray([M.decode_pos0(cfg, P)]), steps=g - 1,
+                         sampler=sampler, rng=key[None],
+                         remaining=jnp.asarray([g - 1]))
+        toks += np.asarray(res["tokens"])[0][
+            np.asarray(res["valid"])[0]].tolist()
+    return toks
+
+
+def test_slot_admission_properties():
+    """2 slots, 5 mixed-length requests: slot bookkeeping + solo match."""
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(0)
+    lengths = [(6, 4), (10, 7), (7, 5), (12, 6), (9, 3)]
+    batches = [{"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (1, p)), jnp.int32)}
+        for p, _ in lengths]
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=max_len, seg_len=3,
+                      seed=0)
+    for b, (_, g) in zip(batches, lengths):
+        eng.submit(b, max_new=g)
+    comps = eng.run()
+
+    # every request completed, with exactly max_new tokens
+    assert sorted(comps) == list(range(5))
+    for uid, (_, g) in enumerate(lengths):
+        assert len(comps[uid].tokens) == g
+
+    # no slot serves two requests within one segment
+    seg_slot = [(seg, slot) for seg, slot, _ in eng.history]
+    assert len(seg_slot) == len(set(seg_slot))
+    # a request stays on ONE slot for its whole lifetime
+    slot_of = {}
+    for _, slot, uid in eng.history:
+        assert slot_of.setdefault(uid, slot) == slot
+    # freed slots are refilled: 5 requests through 2 slots
+    uids_per_slot = {}
+    for _, slot, uid in eng.history:
+        uids_per_slot.setdefault(slot, set()).add(uid)
+    assert max(len(v) for v in uids_per_slot.values()) >= 2
+
+    # per-slot outputs equal solo runs (slot independence)
+    for uid, (b, (_, g)) in enumerate(zip(batches, lengths)):
+        solo = _solo_tokens(params, cfg, b, g, max_len, uid,
+                            jax.random.PRNGKey(0))
+        assert comps[uid].tokens.tolist() == solo, uid
+
+
+def test_engine_eos_stops_early():
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    batch = {"tokens": jnp.asarray(
+        np.random.default_rng(1).integers(0, cfg.vocab_size, (1, 8)),
+        jnp.int32)}
+    max_len = M.decode_capacity(cfg, 8, 8)
+    solo = _solo_tokens(params, cfg, batch, 8, max_len, 0,
+                        jax.random.PRNGKey(0))
+    eos = solo[2]  # force an early stop on the 3rd greedy token
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=max_len, seg_len=4,
+                      seed=0, eos_id=eos)
+    eng.submit(batch, max_new=8)
+    comps = eng.run()
+    assert comps[0].tokens.tolist() == solo[:3]  # EOS token included
+
+
+def test_engine_sampling_invariant_to_segment_length():
+    """Temperature sampling must not depend on how the decode is cut
+    into segments (per-slot keys split once per step, live or not)."""
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(0)
+    lengths = [(6, 5), (9, 7), (5, 4)]
+    batches = [{"tokens": jnp.asarray(
+        rng.integers(0, cfg.vocab_size, (1, p)), jnp.int32)}
+        for p, _ in lengths]
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    outs = []
+    for seg_len in (2, 5):
+        eng = ServeEngine(params, cfg, n_slots=2, max_len=max_len,
+                          seg_len=seg_len, seed=7, sampler=Temperature(0.8))
+        for b, (_, g) in zip(batches, lengths):
+            eng.submit(b, max_new=g)
+        comps = eng.run()
+        outs.append({u: c.tokens.tolist() for u, c in comps.items()})
+    assert outs[0] == outs[1]
+
+
+def test_engine_serves_encdec():
+    """whisper through the engine end-to-end (no SystemExit any more)."""
+    cfg = get_config("whisper-small", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    lengths = [(6, 4), (9, 6)]
+    batches = [family_batch(cfg, 1, p, seed=10 + i)
+               for i, (p, _) in enumerate(lengths)]
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=max_len, seg_len=3)
+    for b, (_, g) in zip(batches, lengths):
+        eng.submit(b, max_new=g)
+    comps = eng.run()
+    assert sorted(comps) == [0, 1]
+    for uid, (_, g) in enumerate(lengths):
+        assert len(comps[uid].tokens) == g
+        solo = _solo_tokens(params, cfg, batches[uid], g, max_len, uid,
+                            jax.random.PRNGKey(0))
+        assert comps[uid].tokens.tolist() == solo
+
+
+def test_engine_rejects_oversized_request():
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=16)
+    batch = {"tokens": jnp.zeros((1, 12), jnp.int32)}
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit(batch, max_new=8)

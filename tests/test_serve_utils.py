@@ -1,30 +1,111 @@
-"""Unit tests for serving-launcher cache alignment (launch/serve.py)."""
+"""Unit tests for the model-layer serving cache contract.
+
+``prefill_into_cache`` / ``graft_cache_entry`` replaced the two
+divergent client-side helpers (launch/serve.py ``pad_cache_to`` raised
+on multi-dim mismatch, examples ``graft`` silently fell through) — the
+checked semantics live in ONE place now.
+"""
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.launch.serve import pad_cache_to
+from repro.configs import get_config
+from repro.models import model as M
+from repro.models.model import (decode_capacity, decode_pos0,
+                                graft_cache_entry, prefill_into_cache)
 
 
-def test_pad_cache_same_shape_copies():
+def test_graft_same_shape_copies():
     dst = jnp.zeros((2, 8, 4))
     src = jnp.ones((2, 8, 4), jnp.float16)
-    out = pad_cache_to({"k": dst}, {"k": src})
-    assert out["k"].dtype == dst.dtype
-    np.testing.assert_array_equal(np.asarray(out["k"]), 1.0)
+    out = graft_cache_entry(dst, src)
+    assert out.dtype == dst.dtype
+    np.testing.assert_array_equal(np.asarray(out), 1.0)
 
 
-def test_pad_cache_grows_single_seq_axis():
+def test_graft_grows_single_seq_axis():
     dst = jnp.zeros((2, 8, 4))
     src = jnp.ones((2, 5, 4))
-    out = pad_cache_to(dst, src)
+    out = graft_cache_entry(dst, src)
     np.testing.assert_array_equal(np.asarray(out[:, :5]), 1.0)
     np.testing.assert_array_equal(np.asarray(out[:, 5:]), 0.0)
 
 
-def test_pad_cache_rejects_multi_dim_mismatch():
+def test_graft_rejects_multi_dim_mismatch():
     dst = jnp.zeros((2, 8, 4))
     with pytest.raises(ValueError, match="more than one dim"):
-        pad_cache_to(dst, jnp.ones((3, 5, 4)))     # batch AND seq differ
+        graft_cache_entry(dst, jnp.ones((3, 5, 4)))     # batch AND seq differ
     with pytest.raises(ValueError, match="more than one dim"):
-        pad_cache_to(dst, jnp.ones((2, 5, 4, 1)))  # rank mismatch
+        graft_cache_entry(dst, jnp.ones((2, 5, 4, 1)))  # rank mismatch
+
+
+def test_graft_rejects_prefill_longer_than_capacity():
+    dst = jnp.zeros((2, 8, 4))
+    with pytest.raises(ValueError, match="exceeds"):
+        graft_cache_entry(dst, jnp.ones((2, 9, 4)))
+
+
+def test_capacity_is_exact_no_off_by_one():
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    assert decode_capacity(cfg, 32, 16) == 48      # P + G, not P + G + 1
+    assert decode_pos0(cfg, 32) == 32
+    vlm = get_config("paligemma-3b", variant="reduced")
+    off = vlm.frontend_tokens
+    assert decode_capacity(vlm, 32, 16) == off + 48
+    assert decode_pos0(vlm, 32) == off + 32
+
+
+def test_prefill_into_cache_rejects_foreign_tree():
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jnp.zeros((2, 8), jnp.int32)
+    _, pc = M.prefill(params, cfg, {"tokens": toks})
+    # a decode cache built for a different batch size must not graft
+    bad = M.init_decode_cache(cfg, 3, 16)
+    with pytest.raises(ValueError, match="more than one dim"):
+        prefill_into_cache(cfg, bad, pc)
+
+
+def test_hybrid_tail_prefill_into_cache_matches_forward():
+    """zamba2 with a tail stack (n_layers % period != 0): the separately
+    stored ``tail_attn`` prefill entry must land in the LAST row of the
+    stacked decode attn cache."""
+    cfg = get_config("zamba2-7b", variant="reduced").replace(n_layers=5)
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    B, S = 2, 12
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size)
+    h, _, _, _ = M.backbone(params, cfg, {"tokens": toks})
+    ref_logits = M._head(params, cfg, h[:, -1:])[:, 0]
+
+    _, pc = M.prefill(params, cfg, {"tokens": toks[:, :S - 1]})
+    assert "tail" in pc and pc["tail"] is not None
+    cache = prefill_into_cache(cfg, M.init_decode_cache(cfg, B, S), pc)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    logits, _ = M.decode_step(params, cfg, cache, toks[:, S - 1:S], pos)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_encdec_prefill_into_cache_matches_forward():
+    """whisper: prefill self/cross/memory graft + one decode step equals
+    the full decoder forward (the path the old launcher SystemExit'd)."""
+    cfg = get_config("whisper-small", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    B, S = 2, 10
+    toks = jax.random.randint(jax.random.PRNGKey(3), (B, S), 0,
+                              cfg.vocab_size)
+    frames = (jax.random.normal(jax.random.PRNGKey(4),
+                                (B, cfg.frontend_tokens, cfg.d_model))
+              * 0.05).astype(jnp.dtype(cfg.dtype))
+    h, _, _, _ = M.backbone(params, cfg, {"tokens": toks, "frames": frames})
+    ref_logits = M._head(params, cfg, h[:, -1:])[:, 0]
+
+    _, pc = M.prefill(params, cfg,
+                      {"tokens": toks[:, :S - 1], "frames": frames})
+    cache = prefill_into_cache(cfg, M.init_decode_cache(cfg, B, S), pc)
+    pos = jnp.full((B,), S - 1, jnp.int32)
+    logits, _ = M.decode_step(params, cfg, cache, toks[:, S - 1:S], pos)
+    np.testing.assert_allclose(np.asarray(logits), np.asarray(ref_logits),
+                               rtol=2e-3, atol=2e-3)
