@@ -245,6 +245,20 @@ def serving():
     emit("serve/speedup_cb_vs_loop", 0.0, res["speedup_cb_vs_loop"])
 
 
+def serving_paged():
+    """Equal-cache-bytes capacity: contiguous slots vs the block-paged
+    engine on shared-preamble traffic.  Appends the "paged" row to
+    BENCH_serve.json."""
+    from benchmarks.serving import serving_paged_bench
+    row = serving_paged_bench(log=_quiet)
+    for name in ("contiguous", "paged_engine"):
+        emit(f"serve_paged/{name}", row[name]["wall_s"] * 1e6,
+             f"peak_live={row[name]['peak_live_requests']};"
+             f"bytes={row[name]['cache_bytes']}")
+    emit("serve_paged/shared_blocks", 0.0,
+         row["paged_engine"]["shared_blocks"])
+
+
 def fleet_scaling(sizes=(8, 32, 64)):
     """Device-fleet wall-clock: sequential per-step loops vs the
     vmapped scan-epoch driver.  Also writes BENCH_fleet.json."""
@@ -267,6 +281,7 @@ ALL_BENCHES = {
     "kernel_moe_dispatch": kernel_moe_dispatch,
     "fleet_scaling": fleet_scaling,
     "serving": serving,
+    "serving_paged": serving_paged,
     "roofline": roofline,
 }
 

@@ -18,4 +18,7 @@ Kernels:
   kd_loss         - fused CE + KL over large vocabularies straight from
                     hidden states (the KD server hot spot; never
                     materialises (T, V) logits in HBM).
+  paged_attn      - block-paged decode attention: the per-slot block
+                    table is scalar-prefetched so each grid cell DMAs
+                    exactly the KV pool rows its slot owns (serving).
 """

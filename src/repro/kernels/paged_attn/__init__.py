@@ -1,0 +1,3 @@
+from repro.kernels.paged_attn import kernel, ops, ref
+
+__all__ = ["kernel", "ops", "ref"]

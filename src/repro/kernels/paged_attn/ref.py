@@ -1,0 +1,44 @@
+"""Pure-jnp oracle for paged decode attention (gather + dense scores).
+
+Layout contract (shared with the kernel and ``layers.attention_decode``):
+logical position ``j`` of slot ``b`` lives in pool row
+``block_table[b, j // block_len]`` at offset ``j % block_len``, so the
+gathered-and-flattened view indexes by logical position directly.
+Table entries past a slot's allocated blocks point at the trash block 0;
+their rows sit above ``pos`` and are masked.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1.0e30
+
+
+def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *,
+                        window: int = 0, softcap: float = 0.0, scale=None):
+    """q: (B, 1, H, Dq); pools: (n_blocks, block_len, KH, D*);
+    block_table: (B, nbt) int32; pos: (B,) int32 -> (B, 1, H, Dv)."""
+    B, _, H, Dq = q.shape
+    KH = k_pool.shape[2]
+    G = H // KH
+    if scale is None:
+        scale = 1.0 / math.sqrt(Dq)
+    kg = k_pool[block_table].reshape((B, -1) + k_pool.shape[2:])
+    vg = v_pool[block_table].reshape((B, -1) + v_pool.shape[2:])
+    S = kg.shape[1]
+    qr = q.reshape(B, 1, KH, G, Dq)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32),
+                   kg.astype(jnp.float32)) * scale
+    if softcap:
+        s = jnp.tanh(s / softcap) * softcap
+    kpos = jnp.arange(S)[None, :]
+    ok = kpos <= pos[:, None]
+    if window:
+        ok = ok & (kpos > pos[:, None] - window)
+    s = jnp.where(ok[:, None, None, None], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", w, vg.astype(jnp.float32))
+    return o.reshape(B, 1, H, vg.shape[-1]).astype(v_pool.dtype)

@@ -22,7 +22,8 @@ import numpy as np
 from repro.configs import get_config
 from repro.launch.mesh import make_host_mesh
 from repro.models import model as M
-from repro.serve import Greedy, ServeEngine, Temperature, TopK
+from repro.serve import (Greedy, PagedServeEngine, ServeEngine, Temperature,
+                         TopK)
 
 
 def mixed_lengths(n: int, prompt_len: int, gen: int):
@@ -67,6 +68,12 @@ def main():
                     help="vary prompt/gen length per request")
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--paged", action="store_true",
+                    help="serve through the block-paged KV engine")
+    ap.add_argument("--block-len", type=int, default=8,
+                    help="paged engine: tokens per KV block")
+    ap.add_argument("--blocks", type=int, default=0,
+                    help="paged engine: pool size (0 = worst-case default)")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, variant=args.variant)
@@ -85,9 +92,16 @@ def main():
 
     params = M.init_params(jax.random.PRNGKey(0), cfg)
     with mesh:
-        engine = ServeEngine(params, cfg, n_slots=args.slots, max_len=max_len,
-                             sampler=pick_sampler(args), seg_len=args.seg_len,
-                             mesh=mesh)
+        if args.paged:
+            engine = PagedServeEngine(
+                params, cfg, n_slots=args.slots, max_len=max_len,
+                sampler=pick_sampler(args), seg_len=args.seg_len, mesh=mesh,
+                block_len=args.block_len,
+                n_blocks=args.blocks or None)
+        else:
+            engine = ServeEngine(params, cfg, n_slots=args.slots,
+                                 max_len=max_len, sampler=pick_sampler(args),
+                                 seg_len=args.seg_len, mesh=mesh)
         for p, g in lengths:
             engine.submit(prompt_batch(cfg, rng, p), max_new=g)
         t0 = time.time()
@@ -98,6 +112,11 @@ def main():
     print(f"{args.arch}: {len(comps)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s, {engine.stats['segments']} segments, "
           f"slot util {util:.0%})")
+    if args.paged:
+        print(f"paged: block_len={engine.block_len} pool={engine.n_blocks} "
+              f"peak_blocks={engine.stats['peak_live_blocks']} "
+              f"shared={engine.stats['shared_blocks']} "
+              f"(free after drain: {engine.alloc.n_free})")
     first = comps[min(comps)]
     print("sample:", first.tokens[:16])
 

@@ -316,22 +316,64 @@ def attention_full(p, cfg: ModelConfig, x, positions, *, window: int,
     return out.reshape(B, S, -1) @ p["wo"], (k, v)
 
 
-def attention_decode(p, cfg: ModelConfig, x, pos, k_cache, v_cache, *,
-                     window: int, mesh=None):
-    """Single-token decode.  x: (B,1,D); caches (B,Smax,KH,Dh).
+def paged_insert(pool, block_table, pos, entry):
+    """Scatter one token's cache entry into a block pool.
 
-    Inserts this step's k/v at ``pos`` (per-batch scatter), attends over
-    the updated cache, returns (out, (k_cache, v_cache)).
+    pool: (n_blocks, block_len, ...); logical position ``pos`` (B,) lives
+    in pool row ``block_table[b, pos // block_len]`` at ``pos % block_len``.
+    The engine guarantees the write-frontier block of every live slot is
+    uniquely owned (shared prefix blocks sit strictly below ``pos``) and
+    points dead slots at the sacrificial trash block 0.
+    """
+    bl = pool.shape[1]
+    bidx = jnp.arange(pos.shape[0])
+    blk = block_table[bidx, pos // bl]
+    return pool.at[blk, pos % bl].set(entry.astype(pool.dtype))
+
+
+def paged_gather(pool, block_table):
+    """Assemble per-slot contiguous views from a block pool.
+
+    (n_blocks, block_len, ...) gathered through (B, nbt) block tables →
+    (B, nbt*block_len, ...): gathered index j IS logical position j.
+    """
+    B = block_table.shape[0]
+    return pool[block_table].reshape((B, -1) + pool.shape[2:])
+
+
+def attention_decode(p, cfg: ModelConfig, x, pos, k_cache, v_cache, *,
+                     window: int, mesh=None, block_table=None):
+    """Single-token decode.  x: (B,1,D).
+
+    Contiguous (``block_table=None``): caches (B,Smax,KH,Dh); inserts
+    this step's k/v at ``pos`` (per-batch scatter) and attends over the
+    updated cache.  Paged: caches are block pools (n_blocks,block_len,
+    KH,Dh); inserts through the block table and attends over the
+    gathered (or Pallas block-table-indexed) view.  Returns
+    (out, (k_cache, v_cache)).
     """
     B = x.shape[0]
     q, k, v = attention_qkv(p, cfg, x, pos[:, None])
-    bidx = jnp.arange(B)
-    k_cache = k_cache.at[bidx, pos].set(k[:, 0].astype(k_cache.dtype))
-    v_cache = v_cache.at[bidx, pos].set(v[:, 0].astype(v_cache.dtype))
-    Smax = k_cache.shape[1]
+    if block_table is None:
+        bidx = jnp.arange(B)
+        k_cache = k_cache.at[bidx, pos].set(k[:, 0].astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx, pos].set(v[:, 0].astype(v_cache.dtype))
+        kg, vg = k_cache, v_cache
+    else:
+        k_cache = paged_insert(k_cache, block_table, pos, k[:, 0])
+        v_cache = paged_insert(v_cache, block_table, pos, v[:, 0])
+        if cfg.use_pallas:
+            from repro.kernels.paged_attn import ops as pa_ops
+            out = pa_ops.paged_decode_attention(
+                q, k_cache, v_cache, block_table, pos, window=window,
+                softcap=cfg.attn_logit_softcap)
+            return out.reshape(B, 1, -1) @ p["wo"], (k_cache, v_cache)
+        kg = paged_gather(k_cache, block_table)
+        vg = paged_gather(v_cache, block_table)
+    Smax = kg.shape[1]
     k_pos = jnp.arange(Smax)[None, :].repeat(B, 0)
     k_pos = jnp.where(k_pos <= pos[:, None], k_pos, -1)
-    out = decode_attention(q, k_cache, v_cache, pos[:, None], k_pos,
+    out = decode_attention(q, kg, vg, pos[:, None], k_pos,
                            window=window, softcap=cfg.attn_logit_softcap,
                            mesh=mesh)
     return out.reshape(B, 1, -1) @ p["wo"], (k_cache, v_cache)
@@ -403,37 +445,53 @@ def mla_full(p, cfg: ModelConfig, x, positions):
     return out.reshape(B, S, H * vd) @ p["wo"], (ckv, k_rope)
 
 
-def mla_decode(p, cfg: ModelConfig, x, pos, ckv_cache, krope_cache,
-               mesh=None):
-    """Absorbed-matrix MLA decode: attends directly in the latent space.
-
-    The 576-float/token latent cache is what makes DeepSeek-V3 long-context
-    decode feasible (long_500k).  Inserts this step's latent, attends, and
-    returns (out, (ckv_cache, krope_cache)).
-    """
+def _mla_attend(p, cfg: ModelConfig, x, pos, ckv, krope, mesh):
+    """Absorbed-matrix attention over a (B, S, r)/(B, S, pr) latent view
+    whose index along S is the logical position (contiguous cache, or a
+    block-table gather of a paged pool)."""
     B = x.shape[0]
     H, nd, pr, vd = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
-    ckv_t, krope_t = mla_latent(p, cfg, x, pos[:, None])
-    bidx = jnp.arange(B)
-    ckv_cache = ckv_cache.at[bidx, pos].set(ckv_t[:, 0].astype(ckv_cache.dtype))
-    krope_cache = krope_cache.at[bidx, pos].set(krope_t[:, 0].astype(krope_cache.dtype))
     q_nope, q_rope = _mla_queries(p, cfg, x, pos[:, None])
     # absorb W_UK into the query:  (B,1,H,nd) x (H,r,nd) -> (B,1,H,r)
     q_lat = jnp.einsum("bqhn,hrn->bqhr", q_nope, p["wk_b"].astype(q_nope.dtype))
-    Smax = ckv_cache.shape[1]
+    Smax = ckv.shape[1]
     k_pos = jnp.arange(Smax)[None, :].repeat(B, 0)
     k_pos = jnp.where(k_pos <= pos[:, None], k_pos, -1)
     s = (jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(jnp.float32),
-                    ckv_cache.astype(jnp.float32))
+                    ckv.astype(jnp.float32))
          + jnp.einsum("bqhp,bsp->bhqs", q_rope.astype(jnp.float32),
-                      krope_cache.astype(jnp.float32)))
+                      krope.astype(jnp.float32)))
     s = _constrain_seq(s, mesh, 3)
     s = s / math.sqrt(nd + pr)
     s = s + _mask_bias(pos[:, None], k_pos, causal=True, window=0)[:, None]
     w = jax.nn.softmax(s, axis=-1)
-    ctx = jnp.einsum("bhqs,bsr->bqhr", w, ckv_cache.astype(jnp.float32))
+    ctx = jnp.einsum("bhqs,bsr->bqhr", w, ckv.astype(jnp.float32))
     v = jnp.einsum("bqhr,hrv->bqhv", ctx, p["wv_b"].astype(jnp.float32))
-    out = v.reshape(B, 1, H * vd).astype(x.dtype) @ p["wo"]
+    return v.reshape(B, 1, H * vd).astype(x.dtype) @ p["wo"]
+
+
+def mla_decode(p, cfg: ModelConfig, x, pos, ckv_cache, krope_cache,
+               mesh=None, block_table=None):
+    """Absorbed-matrix MLA decode: attends directly in the latent space.
+
+    The 576-float/token latent cache is what makes DeepSeek-V3 long-context
+    decode feasible (long_500k).  Inserts this step's latent, attends, and
+    returns (out, (ckv_cache, krope_cache)).  With ``block_table`` the
+    caches are block pools and the attended view is the gathered one.
+    """
+    B = x.shape[0]
+    ckv_t, krope_t = mla_latent(p, cfg, x, pos[:, None])
+    if block_table is None:
+        bidx = jnp.arange(B)
+        ckv_cache = ckv_cache.at[bidx, pos].set(ckv_t[:, 0].astype(ckv_cache.dtype))
+        krope_cache = krope_cache.at[bidx, pos].set(krope_t[:, 0].astype(krope_cache.dtype))
+        ckv_g, krope_g = ckv_cache, krope_cache
+    else:
+        ckv_cache = paged_insert(ckv_cache, block_table, pos, ckv_t[:, 0])
+        krope_cache = paged_insert(krope_cache, block_table, pos, krope_t[:, 0])
+        ckv_g = paged_gather(ckv_cache, block_table)
+        krope_g = paged_gather(krope_cache, block_table)
+    out = _mla_attend(p, cfg, x, pos, ckv_g, krope_g, mesh)
     return out, (ckv_cache, krope_cache)
 
 

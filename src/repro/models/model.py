@@ -131,19 +131,23 @@ def _block_full(p, cfg: ModelConfig, x, positions, *, kind: str, mesh,
     return x, aux, kv
 
 
-def _block_decode(p, cfg: ModelConfig, x, pos, cache, *, kind: str, mesh):
-    """Single-token sub-layer.  cache: dict of per-layer tensors."""
+def _block_decode(p, cfg: ModelConfig, x, pos, cache, *, kind: str, mesh,
+                  block_tables=None):
+    """Single-token sub-layer.  cache: dict of per-layer tensors
+    (contiguous (B, S, ...) rows, or block pools when ``block_tables``
+    (B, nbt) is given)."""
     window = _window_for(cfg, kind)
     h = layers.apply_norm(p["ln1"], x)
     if cfg.attn_type == "mla":
         attn_out, (ckv, kr) = layers.mla_decode(p["attn"], cfg, h, pos,
                                                 cache["ckv"], cache["kr"],
-                                                mesh=mesh)
+                                                mesh=mesh,
+                                                block_table=block_tables)
         new_cache = {"ckv": ckv, "kr": kr}
     else:
         attn_out, (kc, vc) = layers.attention_decode(
             p["attn"], cfg, h, pos, cache["k"], cache["v"], window=window,
-            mesh=mesh)
+            mesh=mesh, block_table=block_tables)
         new_cache = {"k": kc, "v": vc}
     if cfg.post_block_norm:
         attn_out = layers.apply_norm(p["ln1_post"], attn_out)
@@ -225,13 +229,15 @@ def _run_stack(blocks, cfg: ModelConfig, x, positions, *, pattern, mesh,
     return x, aux, caches, stages
 
 
-def _decode_stack(blocks, cfg: ModelConfig, x, pos, cache, *, pattern, mesh):
+def _decode_stack(blocks, cfg: ModelConfig, x, pos, cache, *, pattern, mesh,
+                  block_tables=None):
     def body(x, inp):
         gp, gc = inp
         new_c = {}
         for i in range(len(pattern)):
             x, nc = _block_decode(gp[f"sub{i}"], cfg, x, pos, gc[f"sub{i}"],
-                                  kind=pattern[i], mesh=mesh)
+                                  kind=pattern[i], mesh=mesh,
+                                  block_tables=block_tables)
             new_c[f"sub{i}"] = nc
         return x, new_c
 
@@ -811,8 +817,103 @@ def decode_cache_batch_axes(cfg: ModelConfig):
     return jax.tree.map(axis, a, b)
 
 
-def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, mesh=None):
+# ---------------------------------------------------------------------------
+# serving: block-paged decode cache
+# ---------------------------------------------------------------------------
+
+def decode_cache_seq_axes(cfg: ModelConfig):
+    """Tree of the sequence-axis index of every decode-cache leaf, or -1
+    for leaves with no growing sequence axis (ssm state/conv, encdec
+    cross KV and encoder memory).  Discovered by diffing two abstract
+    caches that differ only in S — the -1 leaves are exactly the ones
+    that stay slot-resident under the paged layout."""
+    a = jax.eval_shape(lambda: init_decode_cache(cfg, 2, 8))
+    b = jax.eval_shape(lambda: init_decode_cache(cfg, 2, 16))
+
+    def axis(x, y):
+        diff = [i for i, (p, q) in enumerate(zip(x.shape, y.shape)) if p != q]
+        return diff[0] if diff else -1
+
+    return jax.tree.map(axis, a, b)
+
+
+def has_paged_leaves(cfg: ModelConfig) -> bool:
+    """False only for families whose whole decode state is per-slot
+    recurrent (pure ssm) — the paged engine then degenerates to the
+    contiguous one with no block pool to manage."""
+    return any(ax >= 0 for ax in jax.tree.leaves(decode_cache_seq_axes(cfg)))
+
+
+def init_paged_cache(cfg: ModelConfig, n_slots: int, n_blocks: int,
+                     block_len: int):
+    """Block-paged decode cache.
+
+    Sequence-carrying leaves become per-leaf block pools: the contiguous
+    (stacked_layers..., B, S, ...) leaf turns into (stacked_layers...,
+    n_blocks, block_len, ...) — block id b is row b of EVERY pool, so one
+    allocator id spans all layers (vLLM-style).  Leaves with no sequence
+    axis (ssm/hybrid recurrent state, encdec cross KV + memory) keep
+    their per-slot batch axis of ``n_slots``.  Block 0 is the trash
+    block: never allocated, it absorbs the masked writes of finished
+    slots (see ``repro.serve.paged``)."""
+    pool = init_decode_cache(cfg, n_blocks, block_len)
+    slotted = init_decode_cache(cfg, n_slots, block_len)
+    seq = decode_cache_seq_axes(cfg)
+    return jax.tree.map(lambda p, s, ax: p if ax >= 0 else s,
+                        pool, slotted, seq)
+
+
+def scatter_prefill_paged(cfg: ModelConfig, paged_cache, sub, slot, ids,
+                          mask, *, block_len: int):
+    """Scatter a B=1 contiguous decode cache ``sub`` (already grafted via
+    ``prefill_into_cache``, S = len(ids) * block_len) into the paged
+    cache: paged leaves land in pool blocks ``ids`` (n_prompt_blocks,),
+    slot-resident leaves in batch row ``slot``.  ``mask`` (same shape as
+    ``ids``) is False for blocks whose content is already pooled (prefix
+    sharing) — their writes are diverted to the trash block 0 instead of
+    re-writing (identical) shared content."""
+    bat = decode_cache_batch_axes(cfg)
+    seq = decode_cache_seq_axes(cfg)
+    ids_eff = jnp.where(mask, ids, 0)
+
+    def put(dst, src, bax, sax):
+        if sax < 0:
+            idx = [slice(None)] * dst.ndim
+            idx[bax] = slot
+            return dst.at[tuple(idx)].set(
+                jnp.take(src, 0, axis=bax).astype(dst.dtype))
+        s = jnp.take(src, 0, axis=bax)  # drop B; seq axis now sits at bax
+        s = s.reshape(s.shape[:bax] + (-1, block_len) + s.shape[bax + 1:])
+        s = jnp.moveaxis(s, bax, 0)     # (n_prompt_blocks, L..., bl, T...)
+        d = jnp.moveaxis(dst, bax, 0)   # (n_blocks, L..., bl, T...)
+        d = d.at[ids_eff].set(s.astype(d.dtype))
+        return jnp.moveaxis(d, 0, bax)
+
+    return jax.tree.map(put, paged_cache, sub, bat, seq)
+
+
+def cache_nbytes(cfg: ModelConfig, B: int, S: int) -> int:
+    """Bytes of a contiguous (B, S) decode cache (abstract, no alloc)."""
+    tree = jax.eval_shape(lambda: init_decode_cache(cfg, B, S))
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def paged_cache_nbytes(cfg: ModelConfig, n_slots: int, n_blocks: int,
+                       block_len: int) -> int:
+    """Bytes of the paged cache: block pools + slot-resident leaves."""
+    tree = jax.eval_shape(
+        lambda: init_paged_cache(cfg, n_slots, n_blocks, block_len))
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, mesh=None,
+                block_tables=None):
     """One serving step: tokens (B, 1) at positions pos (B,).
+
+    With ``block_tables`` (B, nbt) the cache is the paged layout of
+    ``init_paged_cache``: sequence-carrying leaves are block pools read
+    through the table; slot-resident leaves (ssm state, encdec
+    cross/memory) are indexed by batch row exactly as before.
 
     Returns (logits (B, V), new_cache).
     """
@@ -823,9 +924,10 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, mesh=None):
         if "dense_blocks" in params:
             x, c0 = _decode_stack(params["dense_blocks"], cfg, x, pos,
                                   cache["dense_blocks"], pattern=("full",),
-                                  mesh=mesh)
+                                  mesh=mesh, block_tables=block_tables)
         x, c1 = _decode_stack(params["blocks"], cfg, x, pos, cache["blocks"],
-                              pattern=cfg.attn_pattern, mesh=mesh)
+                              pattern=cfg.attn_pattern, mesh=mesh,
+                              block_tables=block_tables)
         new_cache = {"blocks": c1}
         if "dense_blocks" in params:
             new_cache["dense_blocks"] = c0
@@ -838,9 +940,11 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, mesh=None):
         x, nc = _scan(cfg, body, x, (params["blocks"], cache["blocks"]))
         new_cache = {"blocks": nc}
     elif at == "hybrid":
-        x, new_cache = _hybrid_decode(params, cfg, x, pos, cache, mesh=mesh)
+        x, new_cache = _hybrid_decode(params, cfg, x, pos, cache, mesh=mesh,
+                                      block_tables=block_tables)
     elif at == "encdec":
-        x, new_cache = _encdec_decode(params, cfg, x, pos, cache, mesh=mesh)
+        x, new_cache = _encdec_decode(params, cfg, x, pos, cache, mesh=mesh,
+                                      block_tables=block_tables)
     else:
         raise ValueError(at)
 
@@ -848,7 +952,8 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, mesh=None):
     return _head(params, cfg, h)[:, 0], new_cache
 
 
-def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh):
+def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
+                   block_tables=None):
     shared = params["shared_attn"]
 
     def mamba_body(x, inp):
@@ -859,7 +964,8 @@ def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh):
 
     def group_body(x, inp):
         gp, gc, ac = inp
-        x, nac = _block_decode(shared, cfg, x, pos, ac, kind="full", mesh=mesh)
+        x, nac = _block_decode(shared, cfg, x, pos, ac, kind="full", mesh=mesh,
+                               block_tables=block_tables)
         x, ngc = _scan(cfg, mamba_body, x, (gp, gc))
         return x, (ngc, nac)
 
@@ -873,7 +979,7 @@ def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh):
     if has_tail:
         tail_attn = jax.tree.map(lambda t: t[n_groups], attn_cache)
         x, nta = _block_decode(shared, cfg, x, pos, tail_attn, kind="full",
-                               mesh=mesh)
+                               mesh=mesh, block_tables=block_tables)
         x, ntc = _scan(cfg, mamba_body, x, (params["mamba_tail"], cache["tail"]))
         new_cache["tail"] = ntc
         new_cache["attn"] = jax.tree.map(
@@ -883,7 +989,8 @@ def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh):
     return x, new_cache
 
 
-def _encdec_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh):
+def _encdec_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
+                   block_tables=None):
     B = x.shape[0]
     if cfg.pos_embedding == "sinusoidal":
         x = x + layers.sinusoidal_positions(pos[:, None], cfg.d_model).astype(x.dtype)
@@ -892,7 +999,8 @@ def _encdec_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh):
         bp, sc, cc = inp
         h = layers.apply_norm(bp["ln1"], x)
         a, (kc, vc) = layers.attention_decode(bp["attn"], cfg, h, pos,
-                                              sc["k"], sc["v"], window=0)
+                                              sc["k"], sc["v"], window=0,
+                                              block_table=block_tables)
         x = x + a
         h = layers.apply_norm(bp["ln_x"], x)
         q, _, _ = layers.attention_qkv(bp["xattn"], cfg, h, pos[:, None])
@@ -920,7 +1028,39 @@ def greedy_sample(keys, logits):
     return jnp.argmax(logits, -1).astype(jnp.int32)
 
 
-@functools.lru_cache(maxsize=None)
+def _scan_generate(params, cfg: ModelConfig, cache, tok, pos, rem, done,
+                   keys, eos, *, steps, sampler, return_logits, mesh,
+                   block_tables=None):
+    """The scanned decode body shared by the contiguous and paged paths."""
+
+    def body(carry, _):
+        tok, pos, rem, done, keys, cache = carry
+        logits, cache = decode_step(params, cfg, cache, tok[:, None], pos,
+                                    mesh=mesh, block_tables=block_tables)
+        ks = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
+        sampled = sampler(ks[:, 0], logits)
+        live = ~done
+        rem2 = rem - live.astype(rem.dtype)
+        done2 = done | (live & ((sampled == eos) | (rem2 <= 0)))
+        tok2 = jnp.where(live, sampled, tok)
+        # finished slots stop advancing: their (stale) writes pin to
+        # one in-capacity position until the slot is re-admitted
+        pos2 = jnp.where(live, pos + 1, pos)
+        out = (sampled, live, logits) if return_logits else (sampled, live)
+        return (tok2, pos2, rem2, done2, ks[:, 1], cache), out
+
+    carry, ys = jax.lax.scan(body, (tok, pos, rem, done, keys, cache),
+                             None, length=steps)
+    tok, pos, rem, done, keys, cache = carry
+    res = {"tokens": ys[0].T, "valid": ys[1].T, "next_tok": tok,
+           "pos": pos, "remaining": rem, "done": done, "rng": keys,
+           "cache": cache}
+    if return_logits:
+        res["logits"] = jnp.moveaxis(ys[2], 0, 1)
+    return res
+
+
+@functools.lru_cache(maxsize=32)
 def _generate_fn(cfg: ModelConfig, steps: int, sampler, return_logits: bool,
                  mesh):
     """Compiled scanned-decode body, cached per (cfg, steps, sampler).
@@ -931,38 +1071,31 @@ def _generate_fn(cfg: ModelConfig, steps: int, sampler, return_logits: bool,
     """
 
     def run(params, cache, tok, pos, rem, done, keys, eos):
-        def body(carry, _):
-            tok, pos, rem, done, keys, cache = carry
-            logits, cache = decode_step(params, cfg, cache, tok[:, None], pos,
-                                        mesh=mesh)
-            ks = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
-            sampled = sampler(ks[:, 0], logits)
-            live = ~done
-            rem2 = rem - live.astype(rem.dtype)
-            done2 = done | (live & ((sampled == eos) | (rem2 <= 0)))
-            tok2 = jnp.where(live, sampled, tok)
-            # finished slots stop advancing: their (stale) writes pin to
-            # one in-capacity position until the slot is re-admitted
-            pos2 = jnp.where(live, pos + 1, pos)
-            out = (sampled, live, logits) if return_logits else (sampled, live)
-            return (tok2, pos2, rem2, done2, ks[:, 1], cache), out
+        return _scan_generate(params, cfg, cache, tok, pos, rem, done, keys,
+                              eos, steps=steps, sampler=sampler,
+                              return_logits=return_logits, mesh=mesh)
 
-        carry, ys = jax.lax.scan(body, (tok, pos, rem, done, keys, cache),
-                                 None, length=steps)
-        tok, pos, rem, done, keys, cache = carry
-        res = {"tokens": ys[0].T, "valid": ys[1].T, "next_tok": tok,
-               "pos": pos, "remaining": rem, "done": done, "rng": keys,
-               "cache": cache}
-        if return_logits:
-            res["logits"] = jnp.moveaxis(ys[2], 0, 1)
-        return res
+    return jax.jit(run, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=32)
+def _generate_paged_fn(cfg: ModelConfig, steps: int, sampler,
+                       return_logits: bool, mesh):
+    """Paged twin of ``_generate_fn``: same scan, plus the (read-only)
+    per-slot block tables threaded into every ``decode_step``."""
+
+    def run(params, cache, bt, tok, pos, rem, done, keys, eos):
+        return _scan_generate(params, cfg, cache, tok, pos, rem, done, keys,
+                              eos, steps=steps, sampler=sampler,
+                              return_logits=return_logits, mesh=mesh,
+                              block_tables=bt)
 
     return jax.jit(run, donate_argnums=(1,))
 
 
 def generate(params, cfg: ModelConfig, cache, first_tok, pos0, *, steps: int,
              sampler=None, rng=None, eos_id=None, remaining=None, mesh=None,
-             return_logits: bool = False):
+             return_logits: bool = False, block_tables=None):
     """Run ``steps`` decode steps as ONE ``lax.scan`` dispatch.
 
     ``first_tok`` (B,) or (B, 1) is the token fed at ``pos0`` (B,) —
@@ -975,6 +1108,11 @@ def generate(params, cfg: ModelConfig, cache, first_tok, pos0, *, steps: int,
     discarded garbage), ``eos_id`` stopping, and per-slot RNG ``rng``
     (B, 2) split once per step regardless of slot liveness, so a scan
     split into segments samples identically to one long scan.
+
+    With ``block_tables`` (B, nbt) the cache is the block-paged layout of
+    ``init_paged_cache`` and every decode step reads/writes through the
+    tables; the tables themselves are fixed for the whole segment (the
+    engine allocates a request's blocks at admission).
 
     Returns a dict with ``tokens``/``valid`` (B, steps), the carried
     ``next_tok``/``pos``/``remaining``/``done``/``rng``, the updated
@@ -992,5 +1130,10 @@ def generate(params, cfg: ModelConfig, cache, first_tok, pos0, *, steps: int,
         remaining = jnp.full((B,), steps, jnp.int32)
     remaining = jnp.asarray(remaining).reshape(B).astype(jnp.int32)
     eos = jnp.int32(-1 if eos_id is None else eos_id)
+    if block_tables is not None:
+        fn = _generate_paged_fn(cfg, int(steps), sampler, bool(return_logits),
+                                mesh)
+        return fn(params, cache, jnp.asarray(block_tables, jnp.int32), tok,
+                  pos0, remaining, remaining <= 0, rng, eos)
     fn = _generate_fn(cfg, int(steps), sampler, bool(return_logits), mesh)
     return fn(params, cache, tok, pos0, remaining, remaining <= 0, rng, eos)

@@ -1,6 +1,8 @@
 """Serving engine: continuous-batching generation over every arch family."""
-from repro.serve.engine import Completion, Request, ServeEngine
+from repro.serve.engine import (Completion, PagedServeEngine, Request,
+                                ServeEngine)
+from repro.serve.paged import PagedAllocator
 from repro.serve.sampling import Greedy, Temperature, TopK
 
-__all__ = ["Completion", "Greedy", "Request", "ServeEngine", "Temperature",
-           "TopK"]
+__all__ = ["Completion", "Greedy", "PagedAllocator", "PagedServeEngine",
+           "Request", "ServeEngine", "Temperature", "TopK"]

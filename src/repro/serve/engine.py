@@ -1,8 +1,7 @@
 """Slot-based continuous-batching generation engine.
 
-The engine owns ONE fixed-shape decode cache of ``n_slots`` batch rows
-and ``max_len`` positions and serves a queue of variable-length requests
-through it:
+The engine serves a queue of variable-length requests through a fixed
+set of ``n_slots`` batch rows:
 
   admit    : prefill a queued request at B=1, graft its cache into a
              free slot (``prefill_into_cache`` + a per-slot scatter),
@@ -15,6 +14,17 @@ through it:
   between  : finished slots are freed and refilled from the queue, so
              mixed-length traffic keeps the batch full instead of
              padding every request to the longest one.
+
+Two cache layouts share that lifecycle:
+
+``ServeEngine`` (contiguous) owns one ``(n_slots, max_len)`` decode
+cache — engine capacity is ``n_slots * max_len`` rows no matter how
+short requests are.  ``PagedServeEngine`` owns an ``(n_blocks,
+block_len)`` block pool per attention leaf plus per-slot block tables
+(``repro.serve.paged``): a request holds exactly the blocks its own
+capacity spans, identical prompt prefixes are pooled once (refcounted,
+copy-on-write resolved at admission), and slot count is bounded by live
+tokens rather than ``n_slots * max_len``.
 
 Slot independence: attention/SSM state and (single-device) MoE routing
 never mix batch rows, so a request's tokens are identical to a solo run
@@ -29,8 +39,8 @@ from __future__ import annotations
 import dataclasses
 import functools
 import time
-from collections import deque
-from typing import Any, Dict, List, Optional, Tuple
+from collections import OrderedDict, deque
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -38,6 +48,7 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.serve import paged as pg
 from repro.serve.sampling import Greedy
 
 
@@ -51,6 +62,9 @@ class Request:
     batch: Dict[str, Any]
     max_new: int
     key: Optional[Any] = None  # per-request PRNG key (seeded from uid if None)
+    # memoised prefix-block content keys (paged engine): hashing the
+    # prompt/modality bytes is done once, not per blocked admission retry
+    plan_keys: Optional[List] = None
 
     @property
     def prompt_len(self) -> int:
@@ -65,49 +79,64 @@ class Completion:
     n_segments: int        # decode segments this request rode through
 
 
-@functools.lru_cache(maxsize=None)
+class CompiledLRU:
+    """Bounded per-shape executable cache.
+
+    Under open-world traffic every distinct prompt length compiles (and
+    permanently pins) a fresh prefill/admit executable if cached in an
+    unbounded ``lru_cache`` — evicting the per-length jitted callable
+    here drops its executables with it.
+    """
+
+    def __init__(self, build: Callable[[Any], Callable], maxsize: int = 32):
+        self._build, self._maxsize = build, max(maxsize, 1)
+        self._cache: OrderedDict = OrderedDict()
+
+    def __call__(self, key):
+        fn = self._cache.get(key)
+        if fn is None:
+            fn = self._build(key)
+            self._cache[key] = fn
+            if len(self._cache) > self._maxsize:
+                self._cache.popitem(last=False)
+        else:
+            self._cache.move_to_end(key)
+        return fn
+
+    def __len__(self) -> int:
+        return len(self._cache)
+
+
+@functools.lru_cache(maxsize=8)
 def _prefill_fn(cfg: ModelConfig, mesh):
+    """Shared jitted prefill (benchmarks use it for the non-engine serving
+    modes).  The engine itself compiles through its bounded per-length
+    ``CompiledLRU`` instead, so sustained open-world traffic cannot pin
+    an executable per prompt length."""
     return jax.jit(lambda p, b: M.prefill(p, cfg, b, mesh=mesh))
-
-
-@functools.lru_cache(maxsize=None)
-def _admit_fn(cfg: ModelConfig, max_len: int):
-    """Jitted admission: graft a B=1 prefill cache and scatter it into
-    row ``slot`` of the engine's batched cache, fused into ONE dispatch
-    (batch axis per leaf from ``decode_cache_batch_axes``; the batched
-    cache is donated).  Recompiles per prompt shape, like prefill."""
-    axes = M.decode_cache_batch_axes(cfg)
-
-    def admit(cache, pc, slot):
-        sub = M.prefill_into_cache(
-            cfg, M.init_decode_cache(cfg, 1, max_len), pc)
-
-        def put(dst, src, ax):
-            idx = [slice(None)] * dst.ndim
-            idx[ax] = slot
-            return dst.at[tuple(idx)].set(
-                jnp.take(src, 0, axis=ax).astype(dst.dtype))
-
-        return jax.tree.map(put, cache, sub, axes)
-
-    return jax.jit(admit, donate_argnums=(0,))
 
 
 class ServeEngine:
     """Continuous-batching engine over a fixed ``(n_slots, max_len)``
     decode cache.  ``submit()`` requests, then ``run()`` (or ``step()``
-    segment-by-segment for external admission control)."""
+    segment-by-segment for external admission control); drain finished
+    requests with ``pop_completions()`` under sustained traffic."""
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  max_len: int = 128, sampler=None, eos_id: Optional[int] = None,
-                 seg_len: int = 8, mesh=None, seed: int = 0):
+                 seg_len: int = 8, mesh=None, seed: int = 0,
+                 history_limit: int = 4096, compile_cache_size: int = 32):
         cfg.validate()
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_len, self.seg_len = n_slots, max_len, seg_len
         self.sampler = sampler if sampler is not None else Greedy()
         self.eos_id, self.mesh = eos_id, mesh
-        self.cache = M.init_decode_cache(cfg, n_slots, max_len)
         self._base_key = jax.random.PRNGKey(seed)
+        # bounded per-prompt-length executable caches (see CompiledLRU)
+        self._prefill_exec = CompiledLRU(self._build_prefill,
+                                         compile_cache_size)
+        self._admit_exec = CompiledLRU(self._build_admit, compile_cache_size)
+        self._init_cache()
         # per-slot host state
         self.tok = np.zeros((n_slots,), np.int32)
         self.pos = np.zeros((n_slots,), np.int32)
@@ -115,15 +144,48 @@ class ServeEngine:
         self.keys = np.array(jax.random.split(self._base_key, n_slots))
         self.slot_uid = np.full((n_slots,), -1, np.int64)
         self.queue: deque = deque()
+        self._pending: set = set()  # queued uids — O(1) reuse check
         self.completions: Dict[int, Completion] = {}
-        self.history: List[Tuple[int, int, int]] = []  # (segment, slot, uid)
+        self.history: deque = deque(maxlen=history_limit)  # (seg, slot, uid)
         self.segment_idx = 0
         self.stats = {"generated_tokens": 0, "segments": 0, "prefills": 0,
-                      "slot_steps": 0, "live_slot_steps": 0}
+                      "slot_steps": 0, "live_slot_steps": 0,
+                      "peak_live_requests": 0}
         self._out: Dict[int, list] = {}
         self._plen: Dict[int, int] = {}
         self._nseg: Dict[int, int] = {}
         self._uid_auto = 0
+
+    # -- cache layout hooks (overridden by PagedServeEngine) ---------------
+
+    def _init_cache(self) -> None:
+        self.cache = M.init_decode_cache(self.cfg, self.n_slots, self.max_len)
+
+    def _build_prefill(self, P: int):
+        cfg, mesh = self.cfg, self.mesh
+        return jax.jit(lambda p, b: M.prefill(p, cfg, b, mesh=mesh))
+
+    def _build_admit(self, P: int):
+        """Jitted admission: graft a B=1 prefill cache and scatter it
+        into row ``slot`` of the engine's batched cache, fused into ONE
+        dispatch (batch axis per leaf from ``decode_cache_batch_axes``;
+        the batched cache is donated)."""
+        cfg, max_len = self.cfg, self.max_len
+        axes = M.decode_cache_batch_axes(cfg)
+
+        def admit(cache, pc, slot):
+            sub = M.prefill_into_cache(
+                cfg, M.init_decode_cache(cfg, 1, max_len), pc)
+
+            def put(dst, src, ax):
+                idx = [slice(None)] * dst.ndim
+                idx[ax] = slot
+                return dst.at[tuple(idx)].set(
+                    jnp.take(src, 0, axis=ax).astype(dst.dtype))
+
+            return jax.tree.map(put, cache, sub, axes)
+
+        return jax.jit(admit, donate_argnums=(0,))
 
     # -- request intake ----------------------------------------------------
 
@@ -134,28 +196,36 @@ class ServeEngine:
             self._uid_auto += 1
         else:
             self._uid_auto = max(self._uid_auto, uid + 1)
-        if uid in self.completions or uid in self._out or \
-                any(r.uid == uid for r in self.queue):
+        if uid in self.completions or uid in self._out or uid in self._pending:
             raise ValueError(f"request uid {uid} already in use")
         bad = [k for k, v in batch.items() if v.shape[0] != 1]
         if bad:
             raise ValueError(
                 f"request {uid}: batch entries {bad} must have leading dim 1 "
                 f"(one request per submit)")
-        P = batch["tokens"].shape[1]
+        self._validate_capacity(uid, batch["tokens"].shape[1], max_new)
+        if max_new < 1:
+            raise ValueError(f"request {uid}: max_new must be >= 1")
+        self.queue.append(Request(uid, batch, max_new, key))
+        self._pending.add(uid)
+        return uid
+
+    def _validate_capacity(self, uid: int, P: int, max_new: int) -> None:
         need = M.decode_capacity(self.cfg, P, max_new)
         if need > self.max_len:
             raise ValueError(
                 f"request {uid}: prompt {P} + max_new {max_new} needs cache "
                 f"capacity {need} > engine max_len {self.max_len}")
-        if max_new < 1:
-            raise ValueError(f"request {uid}: max_new must be >= 1")
-        self.queue.append(Request(uid, batch, max_new, key))
-        return uid
 
     @property
     def idle(self) -> bool:
         return not self.queue and not (self.slot_uid >= 0).any()
+
+    def pop_completions(self) -> Dict[int, Completion]:
+        """Drain finished requests — the bound on ``completions`` growth
+        under sustained traffic (their uids become reusable)."""
+        out, self.completions = self.completions, {}
+        return out
 
     # -- admission ---------------------------------------------------------
 
@@ -164,12 +234,34 @@ class ServeEngine:
             uid, self._plen.pop(uid),
             np.asarray(self._out.pop(uid), np.int32), self._nseg.pop(uid))
 
+    def _plan(self, req: Request):
+        """Admission plan (paged: block keys/counts).  None = no plan."""
+        return None
+
+    def _fits(self, plan) -> bool:
+        """Can the planned request be placed right now?"""
+        return True
+
+    def _place(self, slot: int, req: Request, pc, plan) -> None:
+        self.cache = self._admit_exec(req.prompt_len)(self.cache, pc, slot)
+
+    def _release_slot(self, slot: int) -> None:
+        self.slot_uid[slot] = -1
+        # EOS can finish a slot with budget left: zero it so the freed
+        # lane runs masked (done = rem<=0) until re-admitted
+        self.rem[slot] = 0
+
     def _admit(self) -> None:
         free = [s for s in range(self.n_slots) if self.slot_uid[s] < 0]
         while free and self.queue:
-            req = self.queue.popleft()
-            logits, pc = _prefill_fn(self.cfg, self.mesh)(self.params,
-                                                          req.batch)
+            req = self.queue[0]
+            plan = self._plan(req)
+            if not self._fits(plan):
+                break  # blocked on pool space: keep arrival order
+            self.queue.popleft()
+            self._pending.discard(req.uid)
+            logits, pc = self._prefill_exec(req.prompt_len)(self.params,
+                                                            req.batch)
             key = req.key if req.key is not None else \
                 jax.random.fold_in(self._base_key, req.uid)
             key, k0 = jax.random.split(key)
@@ -184,22 +276,26 @@ class ServeEngine:
                 self._finish(req.uid)  # done at prefill: no slot needed,
                 continue               # skip the cache graft entirely
             slot = free.pop(0)
-            self.cache = _admit_fn(self.cfg, self.max_len)(self.cache, pc,
-                                                           slot)
+            self._place(slot, req, pc, plan)
             self.slot_uid[slot] = req.uid
             self.tok[slot] = e0
             self.pos[slot] = M.decode_pos0(self.cfg, req.prompt_len)
             self.rem[slot] = req.max_new - 1
             self.keys[slot] = np.asarray(key)
+        self.stats["peak_live_requests"] = max(
+            self.stats["peak_live_requests"], int((self.slot_uid >= 0).sum()))
 
     # -- scanned decode segment --------------------------------------------
 
+    def _run_segment(self):
+        return M.generate(self.params, self.cfg, self.cache,
+                          jnp.asarray(self.tok), jnp.asarray(self.pos),
+                          steps=self.seg_len, sampler=self.sampler,
+                          rng=jnp.asarray(self.keys), eos_id=self.eos_id,
+                          remaining=jnp.asarray(self.rem), mesh=self.mesh)
+
     def _segment(self) -> None:
-        res = M.generate(self.params, self.cfg, self.cache,
-                         jnp.asarray(self.tok), jnp.asarray(self.pos),
-                         steps=self.seg_len, sampler=self.sampler,
-                         rng=jnp.asarray(self.keys), eos_id=self.eos_id,
-                         remaining=jnp.asarray(self.rem), mesh=self.mesh)
+        res = self._run_segment()
         self.cache = res["cache"]
         toks, valid = np.asarray(res["tokens"]), np.asarray(res["valid"])
         done = np.asarray(res["done"])
@@ -220,10 +316,7 @@ class ServeEngine:
             self.stats["live_slot_steps"] += len(new)
             if done[s]:
                 self._finish(uid)
-                self.slot_uid[s] = -1
-                # EOS can finish a slot with budget left: zero it so the
-                # freed lane runs masked (done = rem<=0) until re-admitted
-                self.rem[s] = 0
+                self._release_slot(s)
         self.stats["slot_steps"] += self.n_slots * self.seg_len
         self.stats["segments"] += 1
         self.segment_idx += 1
@@ -244,3 +337,136 @@ class ServeEngine:
         self.stats["wall_s"] = (self.stats.get("wall_s", 0.0)
                                 + time.perf_counter() - t0)
         return self.completions
+
+
+class PagedServeEngine(ServeEngine):
+    """Continuous batching over a block-paged KV cache.
+
+    A request is admitted with exactly the blocks its capacity spans
+    (``ceil(decode_capacity / block_len)``), full prompt blocks dedup'd
+    against the allocator's content pool, so concurrency is bounded by
+    *live tokens* (plus per-request round-up) instead of
+    ``n_slots * max_len``.  Block tables are fixed for a request's
+    lifetime — segments never allocate — and finished slots' tables are
+    pointed back at the trash block before their lanes run on as masked
+    garbage.
+    """
+
+    def __init__(self, params, cfg: ModelConfig, *, block_len: int = 16,
+                 n_blocks: Optional[int] = None, n_slots: int = 4,
+                 max_len: int = 128, share_prefix: bool = True, **kw):
+        self.block_len = block_len
+        self.max_blocks = -(-max_len // block_len)
+        # default pool: worst case every slot holds max_len live tokens
+        self.n_blocks = (1 + n_slots * self.max_blocks
+                         if n_blocks is None else n_blocks)
+        self._has_paged = M.has_paged_leaves(cfg)
+        self.share_prefix = share_prefix and self._has_paged
+        self.alloc = pg.PagedAllocator(self.n_blocks, block_len)
+        self.block_tables = np.full((n_slots, self.max_blocks), pg.TRASH,
+                                    np.int32)
+        self._slot_blocks: Dict[int, List[int]] = {}  # uid -> held block ids
+        super().__init__(params, cfg, n_slots=n_slots, max_len=max_len, **kw)
+        self.stats.update({"shared_blocks": 0, "fresh_blocks": 0,
+                           "peak_live_blocks": 0})
+
+    # -- cache layout ------------------------------------------------------
+
+    def _init_cache(self) -> None:
+        self.cache = M.init_paged_cache(self.cfg, self.n_slots, self.n_blocks,
+                                        self.block_len)
+
+    def _build_admit(self, P: int):
+        cfg, bl = self.cfg, self.block_len
+        n_pb = -(-M.decode_pos0(cfg, P) // bl)  # blocks holding prompt rows
+
+        def admit(cache, pc, slot, ids, mask):
+            sub = M.prefill_into_cache(
+                cfg, M.init_decode_cache(cfg, 1, n_pb * bl), pc)
+            return M.scatter_prefill_paged(cfg, cache, sub, slot, ids, mask,
+                                           block_len=bl)
+
+        return jax.jit(admit, donate_argnums=(0,))
+
+    # -- admission ---------------------------------------------------------
+
+    def _validate_capacity(self, uid: int, P: int, max_new: int) -> None:
+        super()._validate_capacity(uid, P, max_new)
+        if not self._has_paged:
+            return
+        n_total = -(-M.decode_capacity(self.cfg, P, max_new)
+                    // self.block_len)
+        if n_total > self.n_blocks - 1:
+            # admission could otherwise stall forever waiting for blocks
+            # the pool can never provide, even with every slot free
+            raise ValueError(
+                f"request {uid}: needs {n_total} blocks > pool of "
+                f"{self.n_blocks - 1} allocatable blocks")
+
+    def _plan(self, req: Request):
+        """(keys, n_prompt_blocks, n_total_blocks, n_missing)."""
+        if not self._has_paged:
+            return ([], 0, 0, 0)
+        bl = self.block_len
+        pos0 = M.decode_pos0(self.cfg, req.prompt_len)
+        cap = M.decode_capacity(self.cfg, req.prompt_len, req.max_new)
+        n_total = -(-cap // bl)
+        n_pb = -(-pos0 // bl)
+        if req.plan_keys is None:
+            req.plan_keys = (pg.prefix_keys(req.batch, pos0 // bl, bl,
+                                            M.decode_offset(self.cfg))
+                             if self.share_prefix else [])
+        keys = req.plan_keys
+        # the lookup part IS re-evaluated per attempt: pool contents
+        # change between segments while the request waits for blocks
+        missing = n_total - sum(1 for k in keys
+                                if self.alloc.lookup(k) is not None)
+        return (keys, n_pb, n_total, missing)
+
+    def _fits(self, plan) -> bool:
+        return plan[3] <= self.alloc.n_free
+
+    def _place(self, slot: int, req: Request, pc, plan) -> None:
+        keys, n_pb, n_total, _ = plan
+        ids, mask = [], []
+        for i in range(n_total):
+            if i < len(keys):
+                bid, fresh = self.alloc.acquire(keys[i])
+                self.stats["shared_blocks" if not fresh
+                           else "fresh_blocks"] += 1
+            else:
+                # write frontier onward: always privately owned, so
+                # decode writes (and diverged suffixes) never alias
+                bid, fresh = self.alloc.alloc(), True
+                self.stats["fresh_blocks"] += 1
+            ids.append(bid)
+            if i < n_pb:
+                mask.append(fresh)
+        self._slot_blocks[req.uid] = ids
+        row = np.full((self.max_blocks,), pg.TRASH, np.int32)
+        row[:n_total] = ids
+        self.block_tables[slot] = row
+        self.stats["peak_live_blocks"] = max(self.stats["peak_live_blocks"],
+                                             self.alloc.n_live)
+        self.cache = self._admit_exec(req.prompt_len)(
+            self.cache, pc, slot, jnp.asarray(ids[:n_pb], jnp.int32),
+            jnp.asarray(mask, jnp.bool_))
+
+    def _release_slot(self, slot: int) -> None:
+        uid = int(self.slot_uid[slot])
+        super()._release_slot(slot)
+        for bid in self._slot_blocks.pop(uid, []):
+            self.alloc.release(bid)
+        # dead lane: writes pin to (trash block, offset 0) until re-admitted
+        self.block_tables[slot] = pg.TRASH
+        self.pos[slot] = 0
+
+    # -- scanned decode segment --------------------------------------------
+
+    def _run_segment(self):
+        return M.generate(self.params, self.cfg, self.cache,
+                          jnp.asarray(self.tok), jnp.asarray(self.pos),
+                          steps=self.seg_len, sampler=self.sampler,
+                          rng=jnp.asarray(self.keys), eos_id=self.eos_id,
+                          remaining=jnp.asarray(self.rem), mesh=self.mesh,
+                          block_tables=jnp.asarray(self.block_tables))

@@ -28,31 +28,47 @@ class Greedy:
         return jnp.argmax(logits, -1).astype(jnp.int32)
 
 
+# Below this, logits / t amplifies f32 logits toward overflow and the
+# categorical's probabilities degenerate to NaN/one-hot anyway — the
+# distribution IS argmax, so dispatch there (t is a static dataclass
+# field, so this is a Python-level branch, not a traced one).
+ARGMAX_TEMPERATURE = 1e-3
+
+
 @dataclasses.dataclass(frozen=True)
 class Temperature:
-    """Sample from softmax(logits / t) with a per-slot key."""
+    """Sample from softmax(logits / t) with a per-slot key.
+
+    ``t`` at or below ``ARGMAX_TEMPERATURE`` (including t=0) decodes
+    greedily instead of dividing by a vanishing temperature."""
 
     t: float = 1.0
 
     def __call__(self, keys, logits):
-        t = max(self.t, 1e-6)
+        if self.t <= ARGMAX_TEMPERATURE:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
         return jax.vmap(
-            lambda k, l: jax.random.categorical(k, l / t)
+            lambda k, l: jax.random.categorical(k, l / self.t)
         )(keys, logits).astype(jnp.int32)
 
 
 @dataclasses.dataclass(frozen=True)
 class TopK:
-    """Restrict to the k most likely tokens, then temperature-sample."""
+    """Restrict to the k most likely tokens, then temperature-sample.
+
+    ``k`` is clamped to the vocab size (``lax.top_k`` raises on k > V)
+    and tiny/zero temperatures decode greedily, as in ``Temperature``."""
 
     k: int = 40
     t: float = 1.0
 
     def __call__(self, keys, logits):
-        t = max(self.t, 1e-6)
+        if self.t <= ARGMAX_TEMPERATURE:
+            return jnp.argmax(logits, -1).astype(jnp.int32)
+        k = min(self.k, logits.shape[-1])
 
         def one(key, l):
-            vals, idx = jax.lax.top_k(l, self.k)
-            return idx[jax.random.categorical(key, vals / t)]
+            vals, idx = jax.lax.top_k(l, k)
+            return idx[jax.random.categorical(key, vals / self.t)]
 
         return jax.vmap(one)(keys, logits).astype(jnp.int32)

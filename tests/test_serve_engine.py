@@ -205,3 +205,74 @@ def test_engine_rejects_oversized_request():
     batch = {"tokens": jnp.zeros((1, 12), jnp.int32)}
     with pytest.raises(ValueError, match="capacity"):
         eng.submit(batch, max_new=8)
+
+
+# ---------------------------------------------------------------------------
+# bug-sweep regressions (ISSUE 4 satellites)
+# ---------------------------------------------------------------------------
+
+def test_zero_temperature_samplers_decode_greedily():
+    """t=0 (or tiny t) used to divide f32 logits by max(t, 1e-6); now it
+    dispatches to argmax and never produces non-finite probabilities."""
+    from repro.serve import TopK
+    keys = jax.random.split(jax.random.PRNGKey(0), 3)
+    logits = jax.random.normal(jax.random.PRNGKey(1), (3, 64)) * 1e4
+    greedy = np.asarray(jnp.argmax(logits, -1).astype(jnp.int32))
+    for sampler in (Temperature(0.0), Temperature(1e-6), TopK(8, 0.0)):
+        out = np.asarray(sampler(keys, logits))
+        np.testing.assert_array_equal(out, greedy)
+
+
+def test_topk_clamps_k_to_vocab():
+    """k > V used to raise inside lax.top_k."""
+    from repro.serve import TopK
+    keys = jax.random.split(jax.random.PRNGKey(0), 2)
+    logits = jax.random.normal(jax.random.PRNGKey(1), (2, 16))
+    out = np.asarray(TopK(k=1000, t=1.0)(keys, logits))
+    assert out.shape == (2,) and (0 <= out).all() and (out < 16).all()
+    # k=V*10 at t->0 still equals argmax
+    np.testing.assert_array_equal(
+        np.asarray(TopK(k=1000, t=0.0)(keys, logits)),
+        np.asarray(jnp.argmax(logits, -1).astype(jnp.int32)))
+
+
+def test_engine_host_state_is_bounded():
+    """completions drain via pop_completions, history is a bounded deque,
+    and the per-prompt-length compile caches evict old executables."""
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=24, seg_len=2,
+                      history_limit=3, compile_cache_size=2)
+    lengths = [(5, 3), (6, 3), (7, 3), (8, 3)]  # 4 distinct prompt shapes
+    for p, g in lengths:
+        eng.submit({"tokens": jnp.zeros((1, p), jnp.int32)}, max_new=g)
+    comps = eng.run()
+    assert sorted(comps) == [0, 1, 2, 3]
+    # compile caches: at most 2 per-length executables pinned
+    assert len(eng._prefill_exec) <= 2 and len(eng._admit_exec) <= 2
+    # history bounded
+    assert len(eng.history) <= 3
+    # drain: uids become reusable afterwards
+    popped = eng.pop_completions()
+    assert sorted(popped) == [0, 1, 2, 3] and not eng.completions
+    assert not eng._out and not eng._plen and not eng._nseg
+    eng.submit({"tokens": jnp.zeros((1, 5), jnp.int32)}, max_new=2, uid=0)
+    assert eng.run()[0].tokens.shape == (2,)
+
+
+def test_engine_uid_reuse_check_is_set_based():
+    """uid reuse detection must not scan the queue (O(1) via the pending
+    set) and must still catch duplicates in queue/live/completed."""
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=16)
+    batch = {"tokens": jnp.zeros((1, 4), jnp.int32)}
+    for i in range(20):
+        eng.submit(batch, max_new=2, uid=i)
+    assert eng._pending == set(range(20))
+    with pytest.raises(ValueError, match="already in use"):
+        eng.submit(batch, max_new=2, uid=7)
+    comps = eng.run()
+    assert not eng._pending and sorted(comps) == list(range(20))
+    with pytest.raises(ValueError, match="already in use"):
+        eng.submit(batch, max_new=2, uid=7)  # now completed, still caught
