@@ -1,0 +1,121 @@
+"""Benchmark regression gate for the nightly workflow.
+
+Compares the freshly-written ``BENCH_*.json`` files against the
+checked-in baseline snapshot and fails (exit 1) when any
+higher-is-better metric dropped by more than ``--threshold`` (default
+25%).  Only metric paths present in BOTH files are compared, so adding
+a new benchmark row never breaks the gate — it just starts being
+enforced once a baseline containing it is checked in.
+
+  python benchmarks/check_regression.py \
+      --baseline /tmp/bench-baseline --current . --threshold 0.25
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+BENCH_FILES = ("BENCH_serve.json", "BENCH_fleet.json")
+# Gated metrics must transfer across machines: the checked-in baseline
+# is produced on a developer box while the nightly runs on a CI runner,
+# so absolute wall/throughput numbers would gate on runner speed, not
+# code.  HIGHER-is-better: same-run speedup ratios and deterministic
+# capacity/compile-reduction ratios.  LOWER-is-better: executable build
+# counts (deterministic — any growth is a real compile-bound
+# regression).  Absolute tok_s is reported as INFO only; its
+# regressions surface through the speedup ratios computed in-run.
+HIGHER_KEYS = ("speedup", "concurrency_gain", "compile_reduction")
+LOWER_KEYS = ("compiles",)
+INFO_KEYS = ("tok_s",)
+
+
+def _walk(tree, path=()):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _walk(v, path + (k,))
+    elif isinstance(tree, (int, float)) and not isinstance(tree, bool):
+        yield path, float(tree)
+
+
+def _direction(key: str):
+    if any(key.startswith(m) for m in HIGHER_KEYS):
+        return "higher"
+    if any(key.startswith(m) for m in LOWER_KEYS):
+        return "lower"
+    if any(key.startswith(m) for m in INFO_KEYS):
+        return "info"
+    return None
+
+
+def metrics(tree):
+    return {p: (v, _direction(p[-1])) for p, v in _walk(tree)
+            if p and _direction(p[-1])}
+
+
+def compare(baseline: dict, current: dict, threshold: float, label: str):
+    base_m, cur_m = metrics(baseline), metrics(current)
+    failures, checked = [], 0
+    for path, (base, direction) in sorted(base_m.items()):
+        entry = cur_m.get(path)
+        if entry is None or base <= 0:
+            continue
+        cur = entry[0]
+        ratio = cur / base
+        if direction == "info":
+            print(f"  {'INFO':10s} {label}:{'/'.join(path)}  "
+                  f"base={base:.2f} cur={cur:.2f} ({ratio:.2f}x, "
+                  f"not gated: machine-dependent)")
+            continue
+        checked += 1
+        bad = (ratio < 1.0 - threshold if direction == "higher"
+               else ratio > 1.0 + threshold)
+        status = "REGRESSION" if bad else "OK"
+        if bad:
+            failures.append((path, base, cur, ratio))
+        print(f"  {status:10s} {label}:{'/'.join(path)}  "
+              f"base={base:.2f} cur={cur:.2f} ({ratio:.2f}x, "
+              f"{direction} is better)")
+    return checked, failures
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="directory holding the baseline BENCH_*.json")
+    ap.add_argument("--current", required=True,
+                    help="directory holding the fresh BENCH_*.json")
+    ap.add_argument("--threshold", type=float, default=0.25,
+                    help="max allowed fractional drop (0.25 = 25%%)")
+    args = ap.parse_args()
+
+    total_checked, all_failures = 0, []
+    for name in BENCH_FILES:
+        bpath = os.path.join(args.baseline, name)
+        cpath = os.path.join(args.current, name)
+        if not os.path.exists(bpath):
+            print(f"  SKIP       {name}: no baseline")
+            continue
+        if not os.path.exists(cpath):
+            print(f"  MISSING    {name}: benchmark did not produce it")
+            all_failures.append(((name,), 1.0, 0.0, 0.0))
+            continue
+        with open(bpath) as f:
+            baseline = json.load(f)
+        with open(cpath) as f:
+            current = json.load(f)
+        checked, failures = compare(baseline, current, args.threshold, name)
+        total_checked += checked
+        all_failures.extend(failures)
+
+    print(f"{total_checked} metrics checked, {len(all_failures)} regressions "
+          f"(threshold {args.threshold:.0%})")
+    if total_checked == 0:
+        print("no comparable metrics found — refusing to pass an empty gate")
+        return 1
+    return 1 if all_failures else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -259,6 +259,20 @@ def serving_paged():
          row["paged_engine"]["shared_blocks"])
 
 
+def serving_bucketed():
+    """Compile-count bench: open-world mixed-length traffic through the
+    unbucketed vs bucketed (chunked-prefill) engines.  Appends the
+    "bucketed" row to BENCH_serve.json."""
+    from benchmarks.serving import serving_bucketed_bench
+    row = serving_bucketed_bench(log=_quiet)
+    for name, r in row["modes"].items():
+        emit(f"serve_bucketed/{name}", r["wall_s"] * 1e6,
+             f"compiles={r['compiles']};{r['tok_s']}tok/s")
+    emit("serve_bucketed/n_buckets", 0.0, len(row["engine"]["buckets"]))
+    emit("serve_bucketed/n_distinct_lengths", 0.0,
+         row["traffic"]["n_distinct_lengths"])
+
+
 def fleet_scaling(sizes=(8, 32, 64)):
     """Device-fleet wall-clock: sequential per-step loops vs the
     vmapped scan-epoch driver.  Also writes BENCH_fleet.json."""
@@ -282,6 +296,7 @@ ALL_BENCHES = {
     "fleet_scaling": fleet_scaling,
     "serving": serving,
     "serving_paged": serving_paged,
+    "serving_bucketed": serving_bucketed,
     "roofline": roofline,
 }
 

@@ -140,8 +140,27 @@ def _serve_engine_mode(params, cfg, batches, lengths, arrivals, max_len, t0,
     return _drive_engine(engine, batches, lengths, arrivals, t0)
 
 
+def _timed_replays(fn, params, cfg, batches, lengths, arrivals, max_len,
+                   total_tokens, name, repeats: int):
+    """Warmup once, then ``repeats`` timed replays keeping the BEST wall
+    time — sub-second serving runs on shared CI hosts are scheduler-noisy
+    and the regression gate needs a stable number."""
+    fn(params, cfg, batches, lengths, arrivals, max_len,
+       time.perf_counter())  # warmup: compiles every shape variant
+    best, outs, extra = None, None, None
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        outs, extra = fn(params, cfg, batches, lengths, arrivals, max_len, t0)
+        wall = time.perf_counter() - t0
+        n_tok = sum(len(v) for v in outs.values())
+        assert n_tok == total_tokens, (name, n_tok, total_tokens)
+        best = wall if best is None else min(best, wall)
+    return best, outs, extra
+
+
 def serving_bench(n_requests: int = 10, *, n_slots: int = 4, seg_len: int = 8,
-                  seed: int = 0, arch: str = "qwen2-moe-a2.7b", log=print):
+                  seed: int = 0, arch: str = "qwen2-moe-a2.7b", repeats: int = 3,
+                  log=print):
     """Runs the three serving modes on identical traffic; returns + writes
     the BENCH_serve.json payload."""
     cfg = get_config(arch, variant="reduced").replace(vocab_size=256)
@@ -160,13 +179,10 @@ def serving_bench(n_requests: int = 10, *, n_slots: int = 4, seg_len: int = 8,
     }
     results, outputs = {}, {}
     for name, fn in modes.items():
-        fn(params, cfg, batches, lengths, arrivals, max_len,
-           time.perf_counter())  # warmup: compiles every shape variant
-        t0 = time.perf_counter()
-        outs, extra = fn(params, cfg, batches, lengths, arrivals, max_len, t0)
-        wall = time.perf_counter() - t0
+        wall, outs, extra = _timed_replays(
+            fn, params, cfg, batches, lengths, arrivals, max_len,
+            total_tokens, name, repeats)
         n_tok = sum(len(v) for v in outs.values())
-        assert n_tok == total_tokens, (name, n_tok, total_tokens)
         results[name] = {"wall_s": round(wall, 4),
                          "tok_s": round(n_tok / wall, 2),
                          "tokens": n_tok, **extra}
@@ -194,11 +210,12 @@ def serving_bench(n_requests: int = 10, *, n_slots: int = 4, seg_len: int = 8,
             2),
     }
     out = _bench_path()
-    if os.path.exists(out):  # keep the serving_paged row across reruns
+    if os.path.exists(out):  # keep the paged/bucketed rows across reruns
         with open(out) as f:
             prev = json.load(f)
-        if "paged" in prev:
-            payload["paged"] = prev["paged"]
+        for key in ("paged", "bucketed"):
+            if key in prev:
+                payload[key] = prev[key]
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     log(f"  continuous batching {payload['speedup_cb_vs_loop']}x vs "
@@ -231,7 +248,8 @@ def _preamble_traffic(cfg, n: int, seed: int, *, preamble_len: int,
 
 def serving_paged_bench(n_requests: int = 12, *, n_slots: int = 4,
                         seg_len: int = 4, block_len: int = 8, seed: int = 0,
-                        arch: str = "qwen2-moe-a2.7b", log=print):
+                        arch: str = "qwen2-moe-a2.7b", repeats: int = 3,
+                        log=print):
     """Equal-cache-bytes capacity comparison: contiguous slots vs the
     block-paged engine.
 
@@ -276,13 +294,10 @@ def serving_paged_bench(n_requests: int = 12, *, n_slots: int = 4,
     }
     results, outputs = {}, {}
     for name, fn in modes.items():
-        fn(params, cfg, batches, lengths, arrivals, max_len,
-           time.perf_counter())  # warmup: compiles every shape variant
-        t0 = time.perf_counter()
-        outs, extra = fn(params, cfg, batches, lengths, arrivals, max_len, t0)
-        wall = time.perf_counter() - t0
+        wall, outs, extra = _timed_replays(
+            fn, params, cfg, batches, lengths, arrivals, max_len,
+            total_tokens, name, repeats)
         n_tok = sum(len(v) for v in outs.values())
-        assert n_tok == total_tokens, (name, n_tok, total_tokens)
         results[name] = {"wall_s": round(wall, 4),
                          "tok_s": round(n_tok / wall, 2), **extra}
         outputs[name] = outs
@@ -296,6 +311,9 @@ def serving_paged_bench(n_requests: int = 12, *, n_slots: int = 4,
     assert results["paged"]["peak_live_requests"] > n_slots, results
 
     row = {
+        "concurrency_gain": round(
+            results["paged"]["peak_live_requests"]
+            / results["continuous"]["peak_live_requests"], 2),
         "arch": cfg.name,
         "traffic": {"n_requests": n_requests,
                     "preamble_len": 2 * block_len, "suffix_len": block_len,
@@ -321,4 +339,109 @@ def serving_paged_bench(n_requests: int = 12, *, n_slots: int = 4,
         f"requests vs {n_slots} contiguous slots at "
         f"{paged_bytes}/{contig_bytes} cache bytes "
         f"({row['paged_engine']['shared_blocks']} prefix-shared blocks)")
+    return row
+
+
+def _open_world_traffic(cfg, n: int, seed: int, *, min_p: int = 5,
+                        max_p: int = 28):
+    """Open-world traffic: (nearly) every request arrives with a
+    DIFFERENT prompt length — the compile-thrash worst case the bucket
+    ladder is built for."""
+    rng = np.random.default_rng(seed)
+    plens = rng.permutation(np.arange(min_p, max_p + 1))[:n]
+    if n > len(plens):
+        plens = np.concatenate(
+            [plens, rng.integers(min_p, max_p + 1, n - len(plens))])
+    lengths = [(int(p), int(rng.choice(GEN_LENS))) for p in plens]
+    gaps = rng.exponential(MEAN_GAP_S, size=n)
+    arrivals = np.cumsum(gaps) - gaps[0]
+    batches = [{"tokens": jnp.asarray(rng.integers(0, cfg.vocab_size, (1, p)),
+                                      jnp.int32)}
+               for p, _ in lengths]
+    return batches, lengths, arrivals
+
+
+def serving_bucketed_bench(n_requests: int = 16, *, n_slots: int = 4,
+                           seg_len: int = 4, chunk_len: int = 8,
+                           block_len: int = 8, seed: int = 0,
+                           arch: str = "qwen2-moe-a2.7b", repeats: int = 3,
+                           log=print):
+    """Open-world mixed-length traffic: executables built by the
+    unbucketed engine (one prefill + one admit per DISTINCT prompt
+    length) vs the bucketed chunked-prefill engines (one admit per
+    ladder rung) — O(#distinct lengths) vs O(#buckets).  Asserts
+    identical greedy outputs across all three engines and appends the
+    row to BENCH_serve.json under "bucketed"."""
+    cfg = get_config(arch, variant="reduced").replace(vocab_size=256)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    batches, lengths, arrivals = _open_world_traffic(cfg, n_requests, seed)
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    total_tokens = sum(g for _, g in lengths)
+    n_distinct = len({p for p, _ in lengths})
+
+    engines = {
+        "unbucketed": ServeEngine(params, cfg, n_slots=n_slots,
+                                  max_len=max_len, seg_len=seg_len,
+                                  compile_cache_size=2 * n_requests),
+        "bucketed": ServeEngine(params, cfg, n_slots=n_slots,
+                                max_len=max_len, seg_len=seg_len,
+                                chunk_len=chunk_len),
+        "bucketed_paged": PagedServeEngine(params, cfg, n_slots=n_slots,
+                                           max_len=max_len, seg_len=seg_len,
+                                           chunk_len=chunk_len,
+                                           block_len=block_len),
+    }
+    results, outputs = {}, {}
+    for name, eng in engines.items():
+        fn = functools.partial(_serve_engine_mode, engine=eng)
+        wall, outs, extra = _timed_replays(
+            fn, params, cfg, batches, lengths, arrivals, max_len,
+            total_tokens, name, repeats)
+        n_tok = sum(len(v) for v in outs.values())
+        # steady state: every replay reuses the warmup's executables, so
+        # this is exactly the cold-traffic build count
+        results[name] = {"wall_s": round(wall, 4),
+                         "tok_s": round(n_tok / wall, 2),
+                         "compiles": eng.compiles_built,
+                         **extra}
+        outputs[name] = outs
+        log(f"  {name}: {n_tok} tok in {wall:.3f}s, "
+            f"{eng.compiles_built} executables built")
+    assert outputs["bucketed"] == outputs["unbucketed"], \
+        "bucketed engine diverged from unbucketed"
+    assert outputs["bucketed_paged"] == outputs["unbucketed"], \
+        "bucketed paged engine diverged from unbucketed"
+    # the compile-thrash claim: O(#buckets) vs O(#distinct lengths)
+    n_buckets = len(engines["bucketed"].buckets)
+    assert results["unbucketed"]["compiles"] == 2 * n_distinct
+    assert results["bucketed"]["compiles"] <= n_buckets
+    assert results["bucketed_paged"]["compiles"] <= n_buckets
+
+    row = {
+        "arch": cfg.name,
+        "traffic": {"n_requests": n_requests, "n_distinct_lengths": n_distinct,
+                    "gen_lens": GEN_LENS, "seed": seed,
+                    "total_tokens": total_tokens},
+        "engine": {"n_slots": n_slots, "seg_len": seg_len, "max_len": max_len,
+                   "chunk_len": chunk_len,
+                   "buckets": list(engines["bucketed"].buckets)},
+        "modes": results,
+        # deterministic, machine-independent gate metric: how many times
+        # fewer executables the bucketed engine builds
+        "compile_reduction_ratio": round(
+            results["unbucketed"]["compiles"]
+            / max(results["bucketed"]["compiles"], 1), 2),
+        "outputs_match": True,
+    }
+    path = _bench_path()
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload["bucketed"] = row
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    log(f"  bucketed: {results['bucketed']['compiles']} executables for "
+        f"{n_distinct} distinct lengths "
+        f"(unbucketed built {results['unbucketed']['compiles']})")
     return row

@@ -74,7 +74,25 @@ def main():
                     help="paged engine: tokens per KV block")
     ap.add_argument("--blocks", type=int, default=0,
                     help="paged engine: pool size (0 = worst-case default)")
+    ap.add_argument("--bucket", action="store_true",
+                    help="bucketed chunked-prefill admission (compiles "
+                         "O(#buckets) executables, not one per length)")
+    ap.add_argument("--chunk-len", type=int, default=4,
+                    help="bucketed admission: tokens per prefill chunk")
+    ap.add_argument("--buckets", default="",
+                    help="comma-separated bucket ladder (default: "
+                         "powers-of-two chunk multiples)")
+    ap.add_argument("--eager-blocks", action="store_true",
+                    help="paged engine: reserve a request's worst-case "
+                         "blocks at admission instead of lazily")
+    ap.add_argument("--check-unbucketed", action="store_true",
+                    help="replay the same traffic through an unbucketed "
+                         "engine and fail unless completions match")
     args = ap.parse_args()
+    if args.buckets and not args.bucket:
+        ap.error("--buckets requires --bucket")
+    if args.check_unbucketed and not args.bucket:
+        ap.error("--check-unbucketed requires --bucket")
 
     cfg = get_config(args.arch, variant=args.variant)
     if args.variant == "reduced":
@@ -91,19 +109,26 @@ def main():
     max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
 
     params = M.init_params(jax.random.PRNGKey(0), cfg)
+    bucket_kw = {}
+    if args.bucket:
+        bucket_kw["chunk_len"] = args.chunk_len
+        if args.buckets:
+            bucket_kw["buckets"] = [int(b) for b in args.buckets.split(",")]
     with mesh:
         if args.paged:
             engine = PagedServeEngine(
                 params, cfg, n_slots=args.slots, max_len=max_len,
                 sampler=pick_sampler(args), seg_len=args.seg_len, mesh=mesh,
                 block_len=args.block_len,
-                n_blocks=args.blocks or None)
+                n_blocks=args.blocks or None,
+                lazy=not args.eager_blocks, **bucket_kw)
         else:
             engine = ServeEngine(params, cfg, n_slots=args.slots,
                                  max_len=max_len, sampler=pick_sampler(args),
-                                 seg_len=args.seg_len, mesh=mesh)
-        for p, g in lengths:
-            engine.submit(prompt_batch(cfg, rng, p), max_new=g)
+                                 seg_len=args.seg_len, mesh=mesh, **bucket_kw)
+        batches = [prompt_batch(cfg, rng, p) for p, _ in lengths]
+        for b, (_, g) in zip(batches, lengths):
+            engine.submit(b, max_new=g)
         t0 = time.time()
         comps = engine.run()
         dt = time.time() - t0
@@ -112,13 +137,36 @@ def main():
     print(f"{args.arch}: {len(comps)} requests, {n_tok} tokens in {dt:.2f}s "
           f"({n_tok / dt:.1f} tok/s, {engine.stats['segments']} segments, "
           f"slot util {util:.0%})")
+    if args.bucket:
+        print(f"bucketed: chunk_len={engine.chunk_len} "
+              f"ladder={list(engine.buckets)} "
+              f"compiles={engine.compiles_built}")
     if args.paged:
         print(f"paged: block_len={engine.block_len} pool={engine.n_blocks} "
               f"peak_blocks={engine.stats['peak_live_blocks']} "
               f"shared={engine.stats['shared_blocks']} "
+              f"lazy_claimed={engine.stats['lazy_claimed_blocks']} "
+              f"preemptions={engine.stats['preemptions']} "
               f"(free after drain: {engine.alloc.n_free})")
     first = comps[min(comps)]
     print("sample:", first.tokens[:16])
+    if args.check_unbucketed:
+        with mesh:
+            ref = ServeEngine(params, cfg, n_slots=args.slots,
+                              max_len=max_len, sampler=pick_sampler(args),
+                              seg_len=args.seg_len, mesh=mesh)
+            for b, (_, g) in zip(batches, lengths):
+                ref.submit(b, max_new=g)
+            ref_comps = ref.run()
+        got = {u: c.tokens.tolist() for u, c in comps.items()}
+        want = {u: c.tokens.tolist() for u, c in ref_comps.items()}
+        if got != want:
+            raise SystemExit(
+                f"bucketed completions diverged from unbucketed: "
+                f"{got} != {want}")
+        print(f"check-unbucketed: completions match "
+              f"({ref.compiles_built} reference compiles vs "
+              f"{engine.compiles_built} bucketed)")
 
 
 if __name__ == "__main__":

@@ -244,13 +244,16 @@ def decode_attention(q, k_cache, v_cache, q_pos, k_pos, *,
                      window: int = 0, softcap: float = 0.0,
                      scale: Optional[float] = None, causal: bool = True,
                      mesh=None):
-    """Single-step attention.  q: (B,1,H,Dq); caches: (B,S,KH,D*)."""
-    B, _, H, Dq = q.shape
+    """Decode/chunk attention.  q: (B,C,H,Dq); caches: (B,S,KH,D*).
+
+    C is 1 for single-token decode; chunked prefill attends C queries
+    against the same cache view with per-query positional masking."""
+    B, C, H, Dq = q.shape
     KH = k_cache.shape[2]
     G = H // KH
     if scale is None:
         scale = 1.0 / math.sqrt(Dq)
-    qr = q.reshape(B, 1, KH, G, Dq)
+    qr = q.reshape(B, C, KH, G, Dq)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * scale
     s = _constrain_seq(s, mesh, 4)
@@ -259,7 +262,7 @@ def decode_attention(q, k_cache, v_cache, q_pos, k_pos, *,
     s = s + bias[:, None, None]
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", w, v_cache.astype(jnp.float32))
-    return o.reshape(B, 1, H, v_cache.shape[-1]).astype(v_cache.dtype)
+    return o.reshape(B, C, H, v_cache.shape[-1]).astype(v_cache.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -317,17 +320,22 @@ def attention_full(p, cfg: ModelConfig, x, positions, *, window: int,
 
 
 def paged_insert(pool, block_table, pos, entry):
-    """Scatter one token's cache entry into a block pool.
+    """Scatter C tokens' cache entries into a block pool.
 
-    pool: (n_blocks, block_len, ...); logical position ``pos`` (B,) lives
-    in pool row ``block_table[b, pos // block_len]`` at ``pos % block_len``.
-    The engine guarantees the write-frontier block of every live slot is
-    uniquely owned (shared prefix blocks sit strictly below ``pos``) and
-    points dead slots at the sacrificial trash block 0.
+    pool: (n_blocks, block_len, ...); entry (B, C, ...) at logical
+    positions ``pos`` (B, C): position p lives in pool row
+    ``block_table[b, p // block_len]`` at offset ``p % block_len``.  The
+    engine guarantees the write-frontier blocks of every live slot are
+    uniquely owned (shared prefix blocks sit strictly below the
+    frontier; a shared-prefix chunked prefill passes a write table whose
+    shared rows point at the trash block) and points dead slots at the
+    sacrificial trash block 0.  ``pos // block_len`` must stay inside
+    the table width — table gathers clamp out-of-bounds, so an
+    undersized table would silently alias the last entry's block.
     """
     bl = pool.shape[1]
     bidx = jnp.arange(pos.shape[0])
-    blk = block_table[bidx, pos // bl]
+    blk = block_table[bidx[:, None], pos // bl]          # (B, C)
     return pool.at[blk, pos % bl].set(entry.astype(pool.dtype))
 
 
@@ -342,41 +350,51 @@ def paged_gather(pool, block_table):
 
 
 def attention_decode(p, cfg: ModelConfig, x, pos, k_cache, v_cache, *,
-                     window: int, mesh=None, block_table=None):
-    """Single-token decode.  x: (B,1,D).
+                     window: int, mesh=None, block_table=None,
+                     write_table=None):
+    """Decode / chunked-prefill attention.  x: (B,C,D), pos: (B,C).
+
+    C=1 is the single-token decode step; C>1 is one chunked-prefill
+    chunk: all C k/v entries are written into the cache first, then the
+    C queries attend over the updated view with per-query causal (and
+    window) masking — in-chunk causality falls out of the position mask.
 
     Contiguous (``block_table=None``): caches (B,Smax,KH,Dh); inserts
-    this step's k/v at ``pos`` (per-batch scatter) and attends over the
-    updated cache.  Paged: caches are block pools (n_blocks,block_len,
-    KH,Dh); inserts through the block table and attends over the
-    gathered (or Pallas block-table-indexed) view.  Returns
-    (out, (k_cache, v_cache)).
+    this chunk's k/v at ``pos`` (per-batch scatter; positions beyond
+    Smax — bucket padding — are dropped by the scatter) and attends over
+    the updated cache.  Paged: caches are block pools (n_blocks,
+    block_len,KH,Dh); inserts through ``write_table`` (defaults to
+    ``block_table``; chunked admission points already-pooled shared
+    prefix rows at the trash block) and attends over the gathered (or
+    Pallas block-table-indexed) view.  Returns (out, (k_cache, v_cache)).
     """
-    B = x.shape[0]
-    q, k, v = attention_qkv(p, cfg, x, pos[:, None])
+    B, C = x.shape[:2]
+    q, k, v = attention_qkv(p, cfg, x, pos)
     if block_table is None:
         bidx = jnp.arange(B)
-        k_cache = k_cache.at[bidx, pos].set(k[:, 0].astype(k_cache.dtype))
-        v_cache = v_cache.at[bidx, pos].set(v[:, 0].astype(v_cache.dtype))
+        k_cache = k_cache.at[bidx[:, None], pos].set(k.astype(k_cache.dtype))
+        v_cache = v_cache.at[bidx[:, None], pos].set(v.astype(v_cache.dtype))
         kg, vg = k_cache, v_cache
     else:
-        k_cache = paged_insert(k_cache, block_table, pos, k[:, 0])
-        v_cache = paged_insert(v_cache, block_table, pos, v[:, 0])
-        if cfg.use_pallas:
+        wt = block_table if write_table is None else write_table
+        k_cache = paged_insert(k_cache, wt, pos, k)
+        v_cache = paged_insert(v_cache, wt, pos, v)
+        if cfg.use_pallas and C == 1:
+            # the scalar-prefetch kernel is single-query; chunked prefill
+            # (C>1) reads through the gather reference below instead
             from repro.kernels.paged_attn import ops as pa_ops
             out = pa_ops.paged_decode_attention(
-                q, k_cache, v_cache, block_table, pos, window=window,
+                q, k_cache, v_cache, block_table, pos[:, 0], window=window,
                 softcap=cfg.attn_logit_softcap)
             return out.reshape(B, 1, -1) @ p["wo"], (k_cache, v_cache)
         kg = paged_gather(k_cache, block_table)
         vg = paged_gather(v_cache, block_table)
     Smax = kg.shape[1]
     k_pos = jnp.arange(Smax)[None, :].repeat(B, 0)
-    k_pos = jnp.where(k_pos <= pos[:, None], k_pos, -1)
-    out = decode_attention(q, kg, vg, pos[:, None], k_pos,
+    out = decode_attention(q, kg, vg, pos, k_pos,
                            window=window, softcap=cfg.attn_logit_softcap,
                            mesh=mesh)
-    return out.reshape(B, 1, -1) @ p["wo"], (k_cache, v_cache)
+    return out.reshape(B, C, -1) @ p["wo"], (k_cache, v_cache)
 
 
 # ---------------------------------------------------------------------------
@@ -448,47 +466,52 @@ def mla_full(p, cfg: ModelConfig, x, positions):
 def _mla_attend(p, cfg: ModelConfig, x, pos, ckv, krope, mesh):
     """Absorbed-matrix attention over a (B, S, r)/(B, S, pr) latent view
     whose index along S is the logical position (contiguous cache, or a
-    block-table gather of a paged pool)."""
-    B = x.shape[0]
+    block-table gather of a paged pool).  x: (B,C,D), pos: (B,C) — C>1
+    is one chunked-prefill chunk, masked causally per query."""
+    B, C = x.shape[:2]
     H, nd, pr, vd = cfg.n_heads, cfg.nope_head_dim, cfg.rope_head_dim, cfg.v_head_dim
-    q_nope, q_rope = _mla_queries(p, cfg, x, pos[:, None])
-    # absorb W_UK into the query:  (B,1,H,nd) x (H,r,nd) -> (B,1,H,r)
+    q_nope, q_rope = _mla_queries(p, cfg, x, pos)
+    # absorb W_UK into the query:  (B,C,H,nd) x (H,r,nd) -> (B,C,H,r)
     q_lat = jnp.einsum("bqhn,hrn->bqhr", q_nope, p["wk_b"].astype(q_nope.dtype))
     Smax = ckv.shape[1]
     k_pos = jnp.arange(Smax)[None, :].repeat(B, 0)
-    k_pos = jnp.where(k_pos <= pos[:, None], k_pos, -1)
     s = (jnp.einsum("bqhr,bsr->bhqs", q_lat.astype(jnp.float32),
                     ckv.astype(jnp.float32))
          + jnp.einsum("bqhp,bsp->bhqs", q_rope.astype(jnp.float32),
                       krope.astype(jnp.float32)))
     s = _constrain_seq(s, mesh, 3)
     s = s / math.sqrt(nd + pr)
-    s = s + _mask_bias(pos[:, None], k_pos, causal=True, window=0)[:, None]
+    s = s + _mask_bias(pos, k_pos, causal=True, window=0)[:, None]
     w = jax.nn.softmax(s, axis=-1)
     ctx = jnp.einsum("bhqs,bsr->bqhr", w, ckv.astype(jnp.float32))
     v = jnp.einsum("bqhr,hrv->bqhv", ctx, p["wv_b"].astype(jnp.float32))
-    return v.reshape(B, 1, H * vd).astype(x.dtype) @ p["wo"]
+    return v.reshape(B, C, H * vd).astype(x.dtype) @ p["wo"]
 
 
 def mla_decode(p, cfg: ModelConfig, x, pos, ckv_cache, krope_cache,
-               mesh=None, block_table=None):
+               mesh=None, block_table=None, write_table=None):
     """Absorbed-matrix MLA decode: attends directly in the latent space.
 
     The 576-float/token latent cache is what makes DeepSeek-V3 long-context
-    decode feasible (long_500k).  Inserts this step's latent, attends, and
-    returns (out, (ckv_cache, krope_cache)).  With ``block_table`` the
-    caches are block pools and the attended view is the gathered one.
+    decode feasible (long_500k).  Inserts this chunk's latents (x (B,C,D)
+    at pos (B,C); C=1 is plain decode), attends, and returns
+    (out, (ckv_cache, krope_cache)).  With ``block_table`` the caches are
+    block pools and the attended view is the gathered one; ``write_table``
+    (chunked admission) diverts already-pooled shared prefix writes.
     """
     B = x.shape[0]
-    ckv_t, krope_t = mla_latent(p, cfg, x, pos[:, None])
+    ckv_t, krope_t = mla_latent(p, cfg, x, pos)
     if block_table is None:
         bidx = jnp.arange(B)
-        ckv_cache = ckv_cache.at[bidx, pos].set(ckv_t[:, 0].astype(ckv_cache.dtype))
-        krope_cache = krope_cache.at[bidx, pos].set(krope_t[:, 0].astype(krope_cache.dtype))
+        ckv_cache = ckv_cache.at[bidx[:, None], pos].set(
+            ckv_t.astype(ckv_cache.dtype))
+        krope_cache = krope_cache.at[bidx[:, None], pos].set(
+            krope_t.astype(krope_cache.dtype))
         ckv_g, krope_g = ckv_cache, krope_cache
     else:
-        ckv_cache = paged_insert(ckv_cache, block_table, pos, ckv_t[:, 0])
-        krope_cache = paged_insert(krope_cache, block_table, pos, krope_t[:, 0])
+        wt = block_table if write_table is None else write_table
+        ckv_cache = paged_insert(ckv_cache, wt, pos, ckv_t)
+        krope_cache = paged_insert(krope_cache, wt, pos, krope_t)
         ckv_g = paged_gather(ckv_cache, block_table)
         krope_g = paged_gather(krope_cache, block_table)
     out = _mla_attend(p, cfg, x, pos, ckv_g, krope_g, mesh)

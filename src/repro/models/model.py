@@ -132,22 +132,25 @@ def _block_full(p, cfg: ModelConfig, x, positions, *, kind: str, mesh,
 
 
 def _block_decode(p, cfg: ModelConfig, x, pos, cache, *, kind: str, mesh,
-                  block_tables=None):
-    """Single-token sub-layer.  cache: dict of per-layer tensors
-    (contiguous (B, S, ...) rows, or block pools when ``block_tables``
-    (B, nbt) is given)."""
+                  block_tables=None, write_tables=None):
+    """Decode / chunked-prefill sub-layer.  x: (B, C, D), pos: (B, C) —
+    C=1 is the single-token decode step.  cache: dict of per-layer
+    tensors (contiguous (B, S, ...) rows, or block pools when
+    ``block_tables`` (B, nbt) is given; ``write_tables`` diverts chunked
+    admission writes for already-pooled shared prefix blocks)."""
     window = _window_for(cfg, kind)
     h = layers.apply_norm(p["ln1"], x)
     if cfg.attn_type == "mla":
         attn_out, (ckv, kr) = layers.mla_decode(p["attn"], cfg, h, pos,
                                                 cache["ckv"], cache["kr"],
                                                 mesh=mesh,
-                                                block_table=block_tables)
+                                                block_table=block_tables,
+                                                write_table=write_tables)
         new_cache = {"ckv": ckv, "kr": kr}
     else:
         attn_out, (kc, vc) = layers.attention_decode(
             p["attn"], cfg, h, pos, cache["k"], cache["v"], window=window,
-            mesh=mesh, block_table=block_tables)
+            mesh=mesh, block_table=block_tables, write_table=write_tables)
         new_cache = {"k": kc, "v": vc}
     if cfg.post_block_norm:
         attn_out = layers.apply_norm(p["ln1_post"], attn_out)
@@ -230,14 +233,15 @@ def _run_stack(blocks, cfg: ModelConfig, x, positions, *, pattern, mesh,
 
 
 def _decode_stack(blocks, cfg: ModelConfig, x, pos, cache, *, pattern, mesh,
-                  block_tables=None):
+                  block_tables=None, write_tables=None):
     def body(x, inp):
         gp, gc = inp
         new_c = {}
         for i in range(len(pattern)):
             x, nc = _block_decode(gp[f"sub{i}"], cfg, x, pos, gc[f"sub{i}"],
                                   kind=pattern[i], mesh=mesh,
-                                  block_tables=block_tables)
+                                  block_tables=block_tables,
+                                  write_tables=write_tables)
             new_c[f"sub{i}"] = nc
         return x, new_c
 
@@ -915,57 +919,92 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, mesh=None,
     through the table; slot-resident leaves (ssm state, encdec
     cross/memory) are indexed by batch row exactly as before.
 
-    Returns (logits (B, V), new_cache).
+    Returns (logits (B, V), new_cache).  This is the C=1 case of the
+    shared ``_chunk_hidden`` body that chunked prefill feeds C-token
+    chunks through.
+    """
+    x = _embed(params, cfg, tokens)
+    h, new_cache = _chunk_hidden(params, cfg, cache, x, pos[:, None],
+                                 mesh=mesh, block_tables=block_tables)
+    return _head(params, cfg, h)[:, 0], new_cache
+
+
+def _chunk_hidden(params, cfg: ModelConfig, cache, x, pos, *, mesh=None,
+                  block_tables=None, write_tables=None, n_valid=None):
+    """Shared decode / chunked-prefill body: pre-embedded inputs x
+    (B, C, D) at positions pos (B, C), written into (and attended
+    against) the decode cache.  Returns (final-normed hidden (B, C, D),
+    new_cache).
+
+    C=1 is the classic decode step.  C>1 is one chunked-prefill chunk:
+    attention families need no extra masking (per-query positional
+    masks give in-chunk causality, and bucket-pad writes land beyond
+    every live query's visibility), but the ssm/hybrid recurrence
+    integrates everything it sees, so ``n_valid`` (B,) freezes state
+    and conv-tail updates for pad positions (see ssm_prefill_chunk).
     """
     at = cfg.arch_type
-    x = _embed(params, cfg, tokens)
+    C = x.shape[1]
 
     if at in ("dense", "moe", "vlm"):
         if "dense_blocks" in params:
             x, c0 = _decode_stack(params["dense_blocks"], cfg, x, pos,
                                   cache["dense_blocks"], pattern=("full",),
-                                  mesh=mesh, block_tables=block_tables)
+                                  mesh=mesh, block_tables=block_tables,
+                                  write_tables=write_tables)
         x, c1 = _decode_stack(params["blocks"], cfg, x, pos, cache["blocks"],
                               pattern=cfg.attn_pattern, mesh=mesh,
-                              block_tables=block_tables)
+                              block_tables=block_tables,
+                              write_tables=write_tables)
         new_cache = {"blocks": c1}
         if "dense_blocks" in params:
             new_cache["dense_blocks"] = c0
     elif at == "ssm":
         def body(x, inp):
             bp, bc = inp
-            out, nc = ssm.ssm_decode(bp["mixer"], cfg,
-                                     layers.apply_norm(bp["ln"], x), bc)
+            out, nc = _ssm_step(bp, cfg, x, bc, C, n_valid)
             return x + out, nc
         x, nc = _scan(cfg, body, x, (params["blocks"], cache["blocks"]))
         new_cache = {"blocks": nc}
     elif at == "hybrid":
         x, new_cache = _hybrid_decode(params, cfg, x, pos, cache, mesh=mesh,
-                                      block_tables=block_tables)
+                                      block_tables=block_tables,
+                                      write_tables=write_tables,
+                                      n_valid=n_valid)
     elif at == "encdec":
         x, new_cache = _encdec_decode(params, cfg, x, pos, cache, mesh=mesh,
-                                      block_tables=block_tables)
+                                      block_tables=block_tables,
+                                      write_tables=write_tables)
     else:
         raise ValueError(at)
 
-    h = layers.apply_norm(params["final_norm"], x)
-    return _head(params, cfg, h)[:, 0], new_cache
+    return layers.apply_norm(params["final_norm"], x), new_cache
+
+
+def _ssm_step(bp, cfg: ModelConfig, x, bc, C: int, n_valid):
+    """One Mamba-2 block: the O(1) recurrence for C=1, the SSD chunk
+    path (state + conv carry, pad-frozen via ``n_valid``) for C>1."""
+    h = layers.apply_norm(bp["ln"], x)
+    if C == 1:
+        return ssm.ssm_decode(bp["mixer"], cfg, h, bc)
+    return ssm.ssm_prefill_chunk(bp["mixer"], cfg, h, bc, n_valid)
 
 
 def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
-                   block_tables=None):
+                   block_tables=None, write_tables=None, n_valid=None):
     shared = params["shared_attn"]
+    C = x.shape[1]
 
     def mamba_body(x, inp):
         bp, bc = inp
-        out, nc = ssm.ssm_decode(bp["mixer"], cfg,
-                                 layers.apply_norm(bp["ln"], x), bc)
+        out, nc = _ssm_step(bp, cfg, x, bc, C, n_valid)
         return x + out, nc
 
     def group_body(x, inp):
         gp, gc, ac = inp
         x, nac = _block_decode(shared, cfg, x, pos, ac, kind="full", mesh=mesh,
-                               block_tables=block_tables)
+                               block_tables=block_tables,
+                               write_tables=write_tables)
         x, ngc = _scan(cfg, mamba_body, x, (gp, gc))
         return x, (ngc, nac)
 
@@ -979,7 +1018,8 @@ def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
     if has_tail:
         tail_attn = jax.tree.map(lambda t: t[n_groups], attn_cache)
         x, nta = _block_decode(shared, cfg, x, pos, tail_attn, kind="full",
-                               mesh=mesh, block_tables=block_tables)
+                               mesh=mesh, block_tables=block_tables,
+                               write_tables=write_tables)
         x, ntc = _scan(cfg, mamba_body, x, (params["mamba_tail"], cache["tail"]))
         new_cache["tail"] = ntc
         new_cache["attn"] = jax.tree.map(
@@ -990,25 +1030,26 @@ def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
 
 
 def _encdec_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
-                   block_tables=None):
-    B = x.shape[0]
+                   block_tables=None, write_tables=None):
+    B, C = x.shape[:2]
     if cfg.pos_embedding == "sinusoidal":
-        x = x + layers.sinusoidal_positions(pos[:, None], cfg.d_model).astype(x.dtype)
+        x = x + layers.sinusoidal_positions(pos, cfg.d_model).astype(x.dtype)
 
     def body(x, inp):
         bp, sc, cc = inp
         h = layers.apply_norm(bp["ln1"], x)
         a, (kc, vc) = layers.attention_decode(bp["attn"], cfg, h, pos,
                                               sc["k"], sc["v"], window=0,
-                                              block_table=block_tables)
+                                              block_table=block_tables,
+                                              write_table=write_tables)
         x = x + a
         h = layers.apply_norm(bp["ln_x"], x)
-        q, _, _ = layers.attention_qkv(bp["xattn"], cfg, h, pos[:, None])
+        q, _, _ = layers.attention_qkv(bp["xattn"], cfg, h, pos)
         Ta = cc["k"].shape[1]
         kpos = jnp.arange(Ta)[None].repeat(B, 0)
-        xa = layers.decode_attention(q, cc["k"], cc["v"], pos[:, None], kpos,
+        xa = layers.decode_attention(q, cc["k"], cc["v"], pos, kpos,
                                      causal=False)
-        x = x + xa.reshape(B, 1, -1) @ bp["xattn"]["wo"]
+        x = x + xa.reshape(B, C, -1) @ bp["xattn"]["wo"]
         h = layers.apply_norm(bp["ln2"], x)
         x = x + layers.apply_mlp(bp["mlp"], cfg, h)
         return x, {"k": kc, "v": vc}
@@ -1016,6 +1057,115 @@ def _encdec_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
     x, nsc = _scan(cfg, body, x, (params["dec_blocks"], cache["self"],
                                   cache["cross"]))
     return x, {"self": nsc, "cross": cache["cross"], "memory": cache["memory"]}
+
+
+# ---------------------------------------------------------------------------
+# serving: chunked prefill through the decode cache
+# ---------------------------------------------------------------------------
+
+def _encdec_encode(params, cfg: ModelConfig, cache, frames, *, mesh):
+    """Run the encoder and write ``cross`` KV + ``memory`` into the
+    decode cache — the fixed-shape half of an encdec chunked prefill
+    (frames are always ``frontend_tokens`` long, so this never forces a
+    new executable).  Bit-identical to the ``_encdec_backbone`` path."""
+    B, Ta = frames.shape[:2]
+    enc_pos = jnp.arange(Ta)[None].repeat(B, 0)
+    xe = frames.astype(_dtype(cfg))
+    if cfg.pos_embedding == "sinusoidal":
+        xe = xe + layers.sinusoidal_positions(enc_pos, cfg.d_model).astype(xe.dtype)
+    xe = shard_act(xe, mesh)
+
+    def enc_body(x, bp):
+        return _block_full(bp, cfg, x, enc_pos, kind="full", mesh=mesh,
+                           causal=False)[0], 0
+
+    xe, _ = _scan(cfg, enc_body, xe, params["enc_blocks"])
+    memory = layers.apply_norm(params["enc_norm"], xe)
+    mk, mv = jax.vmap(
+        lambda bp: layers.attention_qkv(bp["xattn"], cfg, memory, enc_pos)[1:]
+    )(params["dec_blocks"])
+    cache = dict(cache)
+    cache["cross"] = {"k": mk.astype(cache["cross"]["k"].dtype),
+                      "v": mv.astype(cache["cross"]["v"].dtype)}
+    cache["memory"] = memory.astype(cache["memory"].dtype)
+    return cache
+
+
+def prefill_chunked(params, cfg: ModelConfig, cache, batch, prompt_len, *,
+                    chunk_len: int, mesh=None, block_tables=None,
+                    write_tables=None):
+    """Prefill a prompt THROUGH the decode cache in fixed-size chunks.
+
+    ``batch`` is a B-row prefill batch whose ``tokens`` are padded (any
+    values) to a bucket length such that the full input sequence —
+    ``decode_offset(cfg) + tokens.shape[1]`` — is a multiple of
+    ``chunk_len``; ``prompt_len`` (scalar or (B,)) is the TRUE token
+    count.  ``cache`` is a decode cache (contiguous, or the paged
+    slot-view + pools with ``block_tables`` (B, nbt); the tables must be
+    wide enough for every padded position — table gathers clamp, so an
+    undersized table would alias its last block).  Each chunk runs the
+    shared ``_chunk_hidden`` decode body, so prompt processing and
+    decode are ONE code path and the executable depends only on
+    (bucket, chunk_len), not the true prompt length.
+
+    Pad positions continue sequentially past the prompt: their
+    attention writes land beyond every live query's causal visibility
+    (and decode overwrites each position before attending to it), their
+    contiguous writes past the cache capacity are dropped by the
+    scatter, their paged writes fall through table rows pointing at the
+    trash block, and the ssm/hybrid recurrence is explicitly frozen for
+    them (``n_valid``).  Recurrent (no-sequence-axis) leaves are zeroed
+    first so a reused slot's stale state never leaks into the new
+    request.
+
+    Returns (logits of the last real token (B, V), cache).
+    """
+    at = cfg.arch_type
+    tokens = batch["tokens"]
+    B, T_pad = tokens.shape
+    offset = decode_offset(cfg)
+    S_total = offset + T_pad
+    if S_total % chunk_len:
+        raise ValueError(
+            f"padded input length {S_total} (offset {offset} + tokens "
+            f"{T_pad}) must be a multiple of chunk_len {chunk_len}")
+    seq = decode_cache_seq_axes(cfg)
+    cache = jax.tree.map(
+        lambda leaf, ax: jnp.zeros_like(leaf) if ax < 0 else leaf, cache, seq)
+    if at == "encdec":
+        cache = _encdec_encode(params, cfg, cache, batch["frames"], mesh=mesh)
+
+    x_full = _embed(params, cfg, tokens)
+    if at == "vlm":
+        x_full = jnp.concatenate(
+            [batch["patches"].astype(x_full.dtype), x_full], axis=1)
+    total_real = offset + jnp.broadcast_to(
+        jnp.asarray(prompt_len, jnp.int32).reshape(-1), (B,))
+
+    n_chunks = S_total // chunk_len
+    D = x_full.shape[-1]
+    xs = x_full.reshape(B, n_chunks, chunk_len, D).transpose(1, 0, 2, 3)
+    pos_full = jnp.arange(S_total)[None].repeat(B, 0)
+    ps = pos_full.reshape(B, n_chunks, chunk_len).transpose(1, 0, 2)
+
+    def body(carry, inp):
+        cache, h_last = carry
+        x_c, pos_c = inp
+        start = pos_c[:, 0]
+        n_valid = jnp.clip(total_real - start, 0, chunk_len)
+        h, cache = _chunk_hidden(params, cfg, cache, x_c, pos_c, mesh=mesh,
+                                 block_tables=block_tables,
+                                 write_tables=write_tables, n_valid=n_valid)
+        off = total_real - 1 - start
+        here = (off >= 0) & (off < chunk_len)
+        h_sel = jnp.take_along_axis(
+            h, jnp.clip(off, 0, chunk_len - 1)[:, None, None], axis=1)[:, 0]
+        h_last = jnp.where(here[:, None], h_sel, h_last)
+        return (cache, h_last), 0
+
+    h0 = jnp.zeros((B, D), _dtype(cfg))
+    (cache, h_last), _ = jax.lax.scan(body, (cache, h0), (xs, ps))
+    return _head(params, cfg, h_last[:, None])[:, 0], cache
 
 
 # ---------------------------------------------------------------------------

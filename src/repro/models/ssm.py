@@ -160,10 +160,73 @@ def ssm_forward(p, cfg: ModelConfig, x, *, conv_cache=None, init_state=None,
     out = y @ p["out_proj"]
     if return_cache:
         K = cfg.ssm_conv
-        tail = xBC[:, -(K - 1):] if S >= K - 1 else jnp.pad(
-            xBC, ((0, 0), (K - 1 - S, 0), (0, 0)))
+        if conv_cache is not None:
+            # short continuation chunks: the carried tail still holds the
+            # older inputs the next window needs
+            tail = jnp.concatenate([conv_cache.astype(xBC.dtype), xBC],
+                                   axis=1)[:, -(K - 1):]
+        elif S >= K - 1:
+            tail = xBC[:, -(K - 1):]
+        else:
+            tail = jnp.pad(xBC, ((0, 0), (K - 1 - S, 0), (0, 0)))
         return out, {"state": h_final, "conv": tail}
     return out
+
+
+def ssm_prefill_chunk(p, cfg: ModelConfig, x, cache, n_valid=None):
+    """One chunked-prefill chunk through a Mamba-2 block: C tokens with
+    recurrent state + conv-tail carry.  x: (B, C, D), cache as in
+    ``ssm_decode``.  Returns (out (B, C, D), new_cache).
+
+    ``n_valid`` (B,) masks bucket padding at the chunk tail: positions
+    ``>= n_valid`` contribute NOTHING to the carried state (their
+    softplus'd dt is zeroed, so the SSD decay is exp(0)=1 and the update
+    term vanishes) and the carried conv tail is sliced to end at the
+    last *valid* input — unlike attention, the recurrence integrates
+    every token it sees, so pads must be frozen out explicitly.
+    """
+    B, C, _ = x.shape
+    H, Pd, N = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    d_inner, G, K = cfg.d_inner, cfg.ssm_groups, cfg.ssm_conv
+    proj = x @ p["in_proj"]
+    z, xBC, dt = _split_proj(cfg, proj)
+    conv_in = jnp.concatenate([cache["conv"].astype(xBC.dtype), xBC], axis=1)
+    xBC_conv = _causal_conv(cfg, xBC, p["conv_w"], p["conv_b"],
+                            cache["conv"].astype(xBC.dtype))
+    xs = xBC_conv[..., :d_inner].reshape(B, C, H, Pd)
+    Bs = _expand_groups(
+        xBC_conv[..., d_inner:d_inner + G * N].reshape(B, C, G, N), H)
+    Cs = _expand_groups(
+        xBC_conv[..., d_inner + G * N:].reshape(B, C, G, N), H)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    if n_valid is not None:
+        valid = jnp.arange(C)[None, :] < n_valid[:, None]       # (B, C)
+        dt = jnp.where(valid[..., None], dt, 0.0)
+    A = -jnp.exp(p["A_log"])
+    if cfg.use_pallas:
+        from repro.kernels.ssd_scan import ops as ssd_ops
+        y, h_final = ssd_ops.ssd(xs, dt, A, Bs, Cs, chunk=cfg.ssm_chunk,
+                                 init_state=cache["state"])
+    else:
+        y, h_final = ssd_chunked(xs, dt, A, Bs, Cs, chunk=cfg.ssm_chunk,
+                                 init_state=cache["state"],
+                                 unroll=cfg.scan_unroll,
+                                 compute_dtype=cfg.ssm_compute_dtype)
+    y = y + xs.astype(jnp.float32) * p["D"][None, None, :, None]
+    y = y.reshape(B, C, d_inner).astype(x.dtype)
+    y = layers.apply_norm(p["norm"], y * jax.nn.silu(z))
+    out = y @ p["out_proj"]
+    # conv tail: the K-1 inputs preceding the valid frontier.  conv_in
+    # row b covers chunk-relative positions [-(K-1), C); the tail ends at
+    # n_valid, i.e. starts at conv_in index n_valid (clamped 0..C).
+    if n_valid is None:
+        tail = conv_in[:, -(K - 1):]
+    else:
+        start = jnp.clip(n_valid, 0, C)
+        tail = jax.vmap(
+            lambda row, s: jax.lax.dynamic_slice_in_dim(row, s, K - 1, 0)
+        )(conv_in, start)
+    return out, {"state": h_final, "conv": tail}
 
 
 def ssm_decode(p, cfg: ModelConfig, x, cache):

@@ -1,8 +1,10 @@
 """Serving engine: continuous-batching generation over every arch family."""
+from repro.serve.bucketing import bucket_for, bucket_ladder
 from repro.serve.engine import (Completion, PagedServeEngine, Request,
                                 ServeEngine)
 from repro.serve.paged import PagedAllocator
 from repro.serve.sampling import Greedy, Temperature, TopK
 
 __all__ = ["Completion", "Greedy", "PagedAllocator", "PagedServeEngine",
-           "Request", "ServeEngine", "Temperature", "TopK"]
+           "Request", "ServeEngine", "Temperature", "TopK",
+           "bucket_for", "bucket_ladder"]

@@ -1,0 +1,54 @@
+"""Prompt-length bucket ladders for the chunked-prefill admission path.
+
+Open-world traffic presents an unbounded set of prompt lengths; every
+distinct length used to compile (and pin) its own prefill + admit
+executable.  Bucketing rounds the *padded input length* (modality
+frontend + tokens) up a small ladder of chunk-multiples, so the
+engine's chunked-admission executables are keyed on the bucket — a
+fixed, small set no matter what lengths arrive.  A bucket NEVER
+truncates: when a prompt outgrows the ladder, ``bucket_for`` extends to
+the next chunk multiple instead of clipping (property-tested).
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+
+def bucket_ladder(chunk_len: int, max_len: int) -> Tuple[int, ...]:
+    """Default ladder: powers-of-two multiples of ``chunk_len`` through
+    the first rung covering ``max_len``.  O(log(max_len / chunk_len))
+    rungs, each a chunk multiple — the compile bound under open-world
+    traffic."""
+    if chunk_len < 1:
+        raise ValueError("chunk_len must be >= 1")
+    rungs = [chunk_len]
+    while rungs[-1] < max_len:
+        rungs.append(rungs[-1] * 2)
+    return tuple(rungs)
+
+
+def validate_ladder(ladder: Sequence[int], chunk_len: int) -> Tuple[int, ...]:
+    """Sorted, deduplicated ladder; every rung must be a positive
+    multiple of ``chunk_len`` (the admission scan runs rung/chunk_len
+    chunks, so anything else would change the chunk shape)."""
+    rungs = sorted(set(int(r) for r in ladder))
+    if not rungs:
+        raise ValueError("bucket ladder is empty")
+    for r in rungs:
+        if r < 1 or r % chunk_len:
+            raise ValueError(
+                f"bucket rung {r} is not a positive multiple of "
+                f"chunk_len {chunk_len}")
+    return tuple(rungs)
+
+
+def bucket_for(length: int, ladder: Sequence[int], chunk_len: int) -> int:
+    """Smallest rung >= ``length``; past the top rung, the next chunk
+    multiple (never truncate — a bucket below the prompt length would
+    silently drop tokens)."""
+    if length < 0:
+        raise ValueError("length must be >= 0")
+    for r in ladder:
+        if r >= length:
+            return r
+    return -(-max(length, 1) // chunk_len) * chunk_len

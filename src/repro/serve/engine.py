@@ -48,6 +48,7 @@ import numpy as np
 
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.serve import bucketing as bk
 from repro.serve import paged as pg
 from repro.serve.sampling import Greedy
 
@@ -85,17 +86,21 @@ class CompiledLRU:
     Under open-world traffic every distinct prompt length compiles (and
     permanently pins) a fresh prefill/admit executable if cached in an
     unbounded ``lru_cache`` — evicting the per-length jitted callable
-    here drops its executables with it.
+    here drops its executables with it.  ``builds`` counts every build
+    (including rebuilds after eviction): the compile-thrash metric the
+    bucketed-admission benchmark reports.
     """
 
     def __init__(self, build: Callable[[Any], Callable], maxsize: int = 32):
         self._build, self._maxsize = build, max(maxsize, 1)
         self._cache: OrderedDict = OrderedDict()
+        self.builds = 0
 
     def __call__(self, key):
         fn = self._cache.get(key)
         if fn is None:
             fn = self._build(key)
+            self.builds += 1
             self._cache[key] = fn
             if len(self._cache) > self._maxsize:
                 self._cache.popitem(last=False)
@@ -105,6 +110,26 @@ class CompiledLRU:
 
     def __len__(self) -> int:
         return len(self._cache)
+
+
+def _scatter_slot_row(cache, sub, slot, bat, seq=None):
+    """Write a B=1 cache subtree back into row ``slot`` of the batched
+    cache along each leaf's batch axis (``bat`` from
+    ``decode_cache_batch_axes``).  Leaves with a sequence axis in
+    ``seq`` (paged pools) pass through unchanged — they were updated in
+    place through the block tables."""
+    if seq is None:
+        seq = jax.tree.map(lambda _: -1, bat)
+
+    def put(dst, src, bax, sax):
+        if sax >= 0:
+            return src
+        idx = [slice(None)] * dst.ndim
+        idx[bax] = slot
+        return dst.at[tuple(idx)].set(
+            jnp.take(src, 0, axis=bax).astype(dst.dtype))
+
+    return jax.tree.map(put, cache, sub, bat, seq)
 
 
 @functools.lru_cache(maxsize=8)
@@ -120,19 +145,42 @@ class ServeEngine:
     """Continuous-batching engine over a fixed ``(n_slots, max_len)``
     decode cache.  ``submit()`` requests, then ``run()`` (or ``step()``
     segment-by-segment for external admission control); drain finished
-    requests with ``pop_completions()`` under sustained traffic."""
+    requests with ``pop_completions()`` under sustained traffic.
+
+    With ``chunk_len`` set, admission switches to **bucketed chunked
+    prefill**: the padded input length is rounded up a bucket ladder
+    (``buckets``, default powers-of-two chunk multiples) and the prompt
+    runs through the shared decode body in ``chunk_len``-token chunks
+    directly into the slot's cache row — no separate B=1 prefill graft,
+    and the admission executable is keyed on the BUCKET, so open-world
+    traffic compiles O(#buckets) executables instead of one per
+    distinct prompt length.  Output is token-identical to the
+    unbucketed engine (greedy ties aside; chunked and one-shot prefill
+    agree to float epsilon, not bitwise).
+    """
 
     def __init__(self, params, cfg: ModelConfig, *, n_slots: int = 4,
                  max_len: int = 128, sampler=None, eos_id: Optional[int] = None,
                  seg_len: int = 8, mesh=None, seed: int = 0,
-                 history_limit: int = 4096, compile_cache_size: int = 32):
+                 history_limit: int = 4096, compile_cache_size: int = 32,
+                 chunk_len: Optional[int] = None, buckets=None):
         cfg.validate()
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_len, self.seg_len = n_slots, max_len, seg_len
         self.sampler = sampler if sampler is not None else Greedy()
         self.eos_id, self.mesh = eos_id, mesh
         self._base_key = jax.random.PRNGKey(seed)
-        # bounded per-prompt-length executable caches (see CompiledLRU)
+        self.chunk_len = chunk_len
+        if chunk_len is not None:
+            ladder = (bk.bucket_ladder(chunk_len, max_len)
+                      if buckets is None else buckets)
+            self.buckets = bk.validate_ladder(ladder, chunk_len)
+        else:
+            if buckets is not None:
+                raise ValueError("buckets requires chunk_len")
+            self.buckets = None
+        # bounded per-shape executable caches (see CompiledLRU): keyed on
+        # prompt length (unbucketed) or bucket rung (chunked admission)
         self._prefill_exec = CompiledLRU(self._build_prefill,
                                          compile_cache_size)
         self._admit_exec = CompiledLRU(self._build_admit, compile_cache_size)
@@ -143,6 +191,9 @@ class ServeEngine:
         self.rem = np.zeros((n_slots,), np.int32)
         self.keys = np.array(jax.random.split(self._base_key, n_slots))
         self.slot_uid = np.full((n_slots,), -1, np.int64)
+        self._slot_seq = np.zeros((n_slots,), np.int64)  # admission order
+        self._admit_seq = 0
+        self._live_req: Dict[int, Request] = {}  # uid -> Request while live
         self.queue: deque = deque()
         self._pending: set = set()  # queued uids — O(1) reuse check
         self.completions: Dict[int, Completion] = {}
@@ -156,6 +207,13 @@ class ServeEngine:
         self._nseg: Dict[int, int] = {}
         self._uid_auto = 0
 
+    @property
+    def compiles_built(self) -> int:
+        """Total prefill/admit executables built so far (rebuilds after
+        LRU eviction included) — O(#buckets) under chunked admission,
+        O(#distinct prompt lengths) without."""
+        return self._prefill_exec.builds + self._admit_exec.builds
+
     # -- cache layout hooks (overridden by PagedServeEngine) ---------------
 
     def _init_cache(self) -> None:
@@ -165,27 +223,44 @@ class ServeEngine:
         cfg, mesh = self.cfg, self.mesh
         return jax.jit(lambda p, b: M.prefill(p, cfg, b, mesh=mesh))
 
-    def _build_admit(self, P: int):
-        """Jitted admission: graft a B=1 prefill cache and scatter it
-        into row ``slot`` of the engine's batched cache, fused into ONE
-        dispatch (batch axis per leaf from ``decode_cache_batch_axes``;
-        the batched cache is donated)."""
+    def _build_admit(self, key):
+        """Jitted admission, one dispatch, batched cache donated.
+
+        Unbucketed (``key`` = prompt length): graft a B=1 prefill cache
+        and scatter it into row ``slot`` of the engine's batched cache
+        (batch axis per leaf from ``decode_cache_batch_axes``).
+
+        Chunked (``key`` = bucket rung): slice the slot's B=1 cache
+        view, run ``prefill_chunked`` through it, scatter the view back
+        and return the last real token's logits — prompt length and
+        slot are runtime operands, so every prompt in the bucket reuses
+        this one executable."""
+        if self.chunk_len is not None:
+            return self._build_admit_chunked(key)
         cfg, max_len = self.cfg, self.max_len
         axes = M.decode_cache_batch_axes(cfg)
 
         def admit(cache, pc, slot):
             sub = M.prefill_into_cache(
                 cfg, M.init_decode_cache(cfg, 1, max_len), pc)
-
-            def put(dst, src, ax):
-                idx = [slice(None)] * dst.ndim
-                idx[ax] = slot
-                return dst.at[tuple(idx)].set(
-                    jnp.take(src, 0, axis=ax).astype(dst.dtype))
-
-            return jax.tree.map(put, cache, sub, axes)
+            return _scatter_slot_row(cache, sub, slot, axes)
 
         return jax.jit(admit, donate_argnums=(0,))
+
+    def _build_admit_chunked(self, rung: int):
+        cfg, mesh, C = self.cfg, self.mesh, self.chunk_len
+        axes = M.decode_cache_batch_axes(cfg)
+
+        def admit(params, cache, batch, prompt_len, slot):
+            s1 = jnp.reshape(slot, (1,))
+            sub = jax.tree.map(
+                lambda leaf, ax: jnp.take(leaf, s1, axis=ax), cache, axes)
+            logits, sub = M.prefill_chunked(params, cfg, sub, batch,
+                                            prompt_len, chunk_len=C,
+                                            mesh=mesh)
+            return logits, _scatter_slot_row(cache, sub, slot, axes)
+
+        return jax.jit(admit, donate_argnums=(1,))
 
     # -- request intake ----------------------------------------------------
 
@@ -230,13 +305,34 @@ class ServeEngine:
     # -- admission ---------------------------------------------------------
 
     def _finish(self, uid: int) -> None:
+        self._live_req.pop(uid, None)
         self.completions[uid] = Completion(
             uid, self._plen.pop(uid),
             np.asarray(self._out.pop(uid), np.int32), self._nseg.pop(uid))
 
+    def _bucket_rung(self, P: int) -> int:
+        """Bucket for a P-token prompt: the padded INPUT length
+        (modality frontend + tokens) rounded up the ladder."""
+        return bk.bucket_for(M.decode_pos0(self.cfg, P), self.buckets,
+                             self.chunk_len)
+
+    def _padded_batch(self, req: Request, rung: int):
+        """The request's batch with tokens right-padded so the full
+        input sequence is exactly ``rung`` long (pad values are masked
+        out of cache/state by the chunked prefill contract)."""
+        T_pad = rung - M.decode_offset(self.cfg)
+        toks = np.zeros((1, T_pad), np.int32)
+        toks[:, :req.prompt_len] = np.asarray(req.batch["tokens"])
+        batch = dict(req.batch)
+        batch["tokens"] = jnp.asarray(toks)
+        return batch
+
     def _plan(self, req: Request):
-        """Admission plan (paged: block keys/counts).  None = no plan."""
-        return None
+        """Admission plan (bucket rung; paged adds block keys/counts).
+        None = nothing to plan (unbucketed contiguous admission)."""
+        if self.chunk_len is None:
+            return None
+        return {"rung": self._bucket_rung(req.prompt_len)}
 
     def _fits(self, plan) -> bool:
         """Can the planned request be placed right now?"""
@@ -244,6 +340,20 @@ class ServeEngine:
 
     def _place(self, slot: int, req: Request, pc, plan) -> None:
         self.cache = self._admit_exec(req.prompt_len)(self.cache, pc, slot)
+
+    def _admit_chunked_into(self, slot: int, req: Request, plan):
+        """Run the bucketed chunked prefill straight into ``slot``'s
+        cache row; returns the last real token's logits (1, V)."""
+        rung = plan["rung"]
+        logits, self.cache = self._admit_exec(rung)(
+            self.params, self.cache, self._padded_batch(req, rung),
+            jnp.int32(req.prompt_len), jnp.int32(slot))
+        return logits
+
+    def _rollback_place(self, slot: int, req: Request) -> None:
+        """Undo a chunked placement whose request finished at prefill
+        (max_new == 1 / instant EOS): the slot was never marked live, so
+        only layout resources (paged blocks) need returning."""
 
     def _release_slot(self, slot: int) -> None:
         self.slot_uid[slot] = -1
@@ -260,11 +370,20 @@ class ServeEngine:
                 break  # blocked on pool space: keep arrival order
             self.queue.popleft()
             self._pending.discard(req.uid)
-            logits, pc = self._prefill_exec(req.prompt_len)(self.params,
-                                                            req.batch)
             key = req.key if req.key is not None else \
                 jax.random.fold_in(self._base_key, req.uid)
             key, k0 = jax.random.split(key)
+            if self.chunk_len is None:
+                # unbucketed: slotless B=1 prefill, graft deferred so a
+                # request finishing at prefill never touches the cache
+                slot = free[0]
+                logits, pc = self._prefill_exec(req.prompt_len)(self.params,
+                                                                req.batch)
+            else:
+                # bucketed: the chunked prefill IS the placement — it
+                # writes through the slot's cache row / block tables
+                slot = free[0]
+                logits = self._admit_chunked_into(slot, req, plan)
             e0 = int(np.asarray(self.sampler(k0[None], logits))[0])
             self._out[req.uid] = [e0]
             self._plen[req.uid] = req.prompt_len
@@ -273,11 +392,17 @@ class ServeEngine:
             self.stats["generated_tokens"] += 1
             if req.max_new <= 1 or (self.eos_id is not None
                                     and e0 == self.eos_id):
-                self._finish(req.uid)  # done at prefill: no slot needed,
-                continue               # skip the cache graft entirely
-            slot = free.pop(0)
-            self._place(slot, req, pc, plan)
+                self._finish(req.uid)  # done at prefill: no slot consumed
+                if self.chunk_len is not None:
+                    self._rollback_place(slot, req)
+                continue
+            free.pop(0)
+            if self.chunk_len is None:
+                self._place(slot, req, pc, plan)
             self.slot_uid[slot] = req.uid
+            self._slot_seq[slot] = self._admit_seq
+            self._admit_seq += 1
+            self._live_req[req.uid] = req
             self.tok[slot] = e0
             self.pos[slot] = M.decode_pos0(self.cfg, req.prompt_len)
             self.rem[slot] = req.max_new - 1
@@ -323,9 +448,14 @@ class ServeEngine:
 
     # -- driving -----------------------------------------------------------
 
+    def _pre_segment(self) -> None:
+        """Hook between admission and the decode segment (paged lazy
+        block extension / preemption)."""
+
     def step(self) -> None:
         """Admit waiting requests, then run one decode segment."""
         self._admit()
+        self._pre_segment()
         if (self.slot_uid >= 0).any():
             self._segment()
 
@@ -342,19 +472,29 @@ class ServeEngine:
 class PagedServeEngine(ServeEngine):
     """Continuous batching over a block-paged KV cache.
 
-    A request is admitted with exactly the blocks its capacity spans
-    (``ceil(decode_capacity / block_len)``), full prompt blocks dedup'd
-    against the allocator's content pool, so concurrency is bounded by
-    *live tokens* (plus per-request round-up) instead of
-    ``n_slots * max_len``.  Block tables are fixed for a request's
-    lifetime — segments never allocate — and finished slots' tables are
-    pointed back at the trash block before their lanes run on as masked
-    garbage.
+    A request is admitted holding blocks from the shared pool, full
+    prompt blocks dedup'd against the allocator's content pool, so
+    concurrency is bounded by *live tokens* (plus per-request round-up)
+    instead of ``n_slots * max_len``.
+
+    With ``lazy=True`` (default) admission claims only the blocks the
+    PROMPT spans; decode blocks are claimed per segment as the write
+    frontier crosses block boundaries (``_pre_segment``), so a request
+    holds memory proportional to what it has actually generated —
+    long-``max_new`` traffic no longer reserves its worst case up
+    front.  If the pool runs dry between segments the youngest-admitted
+    live request is preempted: its blocks return to the pool and the
+    request re-queues for a deterministic replay (same per-request key,
+    so its final tokens are unchanged).  The oldest request is never
+    preempted, which guarantees forward progress.  ``lazy=False``
+    restores the PR 4 behavior: ``ceil(decode_capacity / block_len)``
+    blocks at admission, tables fixed for the request's lifetime.
     """
 
     def __init__(self, params, cfg: ModelConfig, *, block_len: int = 16,
                  n_blocks: Optional[int] = None, n_slots: int = 4,
-                 max_len: int = 128, share_prefix: bool = True, **kw):
+                 max_len: int = 128, share_prefix: bool = True,
+                 lazy: bool = True, **kw):
         self.block_len = block_len
         self.max_blocks = -(-max_len // block_len)
         # default pool: worst case every slot holds max_len live tokens
@@ -362,13 +502,15 @@ class PagedServeEngine(ServeEngine):
                          if n_blocks is None else n_blocks)
         self._has_paged = M.has_paged_leaves(cfg)
         self.share_prefix = share_prefix and self._has_paged
+        self.lazy = lazy and self._has_paged
         self.alloc = pg.PagedAllocator(self.n_blocks, block_len)
         self.block_tables = np.full((n_slots, self.max_blocks), pg.TRASH,
                                     np.int32)
         self._slot_blocks: Dict[int, List[int]] = {}  # uid -> held block ids
         super().__init__(params, cfg, n_slots=n_slots, max_len=max_len, **kw)
         self.stats.update({"shared_blocks": 0, "fresh_blocks": 0,
-                           "peak_live_blocks": 0})
+                           "peak_live_blocks": 0, "lazy_claimed_blocks": 0,
+                           "preemptions": 0})
 
     # -- cache layout ------------------------------------------------------
 
@@ -376,9 +518,11 @@ class PagedServeEngine(ServeEngine):
         self.cache = M.init_paged_cache(self.cfg, self.n_slots, self.n_blocks,
                                         self.block_len)
 
-    def _build_admit(self, P: int):
+    def _build_admit(self, key):
+        if self.chunk_len is not None:
+            return self._build_admit_chunked(key)
         cfg, bl = self.cfg, self.block_len
-        n_pb = -(-M.decode_pos0(cfg, P) // bl)  # blocks holding prompt rows
+        n_pb = -(-M.decode_pos0(cfg, key) // bl)  # blocks holding prompt rows
 
         def admit(cache, pc, slot, ids, mask):
             sub = M.prefill_into_cache(
@@ -387,6 +531,32 @@ class PagedServeEngine(ServeEngine):
                                            block_len=bl)
 
         return jax.jit(admit, donate_argnums=(0,))
+
+    def _build_admit_chunked(self, rung: int):
+        """Chunked admission against the paged layout: slot-resident
+        leaves are sliced to a B=1 view, pool leaves pass through whole
+        and the chunk writes flow through the (rung-wide) read/write
+        tables — the write table diverts already-pooled shared prefix
+        rows to the trash block so chunked re-computation can never
+        perturb content other requests are reading."""
+        cfg, mesh, C = self.cfg, self.mesh, self.chunk_len
+        bat = M.decode_cache_batch_axes(cfg)
+        seq = M.decode_cache_seq_axes(cfg)
+
+        def admit(params, cache, batch, prompt_len, slot, read_tbl,
+                  write_tbl):
+            s1 = jnp.reshape(slot, (1,))
+            sub = jax.tree.map(
+                lambda leaf, bax, sax: leaf if sax >= 0 else
+                jnp.take(leaf, s1, axis=bax),
+                cache, bat, seq)
+            logits, sub = M.prefill_chunked(params, cfg, sub, batch,
+                                            prompt_len, chunk_len=C,
+                                            mesh=mesh, block_tables=read_tbl,
+                                            write_tables=write_tbl)
+            return logits, _scatter_slot_row(cache, sub, slot, bat, seq)
+
+        return jax.jit(admit, donate_argnums=(1,))
 
     # -- admission ---------------------------------------------------------
 
@@ -403,54 +573,102 @@ class PagedServeEngine(ServeEngine):
                 f"request {uid}: needs {n_total} blocks > pool of "
                 f"{self.n_blocks - 1} allocatable blocks")
 
+    def _n_total_blocks(self, req: Request) -> int:
+        return -(-M.decode_capacity(self.cfg, req.prompt_len, req.max_new)
+                 // self.block_len)
+
     def _plan(self, req: Request):
-        """(keys, n_prompt_blocks, n_total_blocks, n_missing)."""
+        rung = (self._bucket_rung(req.prompt_len)
+                if self.chunk_len is not None else None)
         if not self._has_paged:
-            return ([], 0, 0, 0)
+            return {"rung": rung, "keys": [], "n_pb": 0, "n_alloc": 0,
+                    "missing": 0}
         bl = self.block_len
         pos0 = M.decode_pos0(self.cfg, req.prompt_len)
-        cap = M.decode_capacity(self.cfg, req.prompt_len, req.max_new)
-        n_total = -(-cap // bl)
+        n_total = self._n_total_blocks(req)
         n_pb = -(-pos0 // bl)
         if req.plan_keys is None:
             req.plan_keys = (pg.prefix_keys(req.batch, pos0 // bl, bl,
                                             M.decode_offset(self.cfg))
                              if self.share_prefix else [])
         keys = req.plan_keys
+        # lazy admission claims only the prompt's blocks; the rest are
+        # claimed per segment as the write frontier crosses boundaries
+        n_alloc = n_pb if self.lazy else n_total
         # the lookup part IS re-evaluated per attempt: pool contents
         # change between segments while the request waits for blocks
-        missing = n_total - sum(1 for k in keys
+        missing = n_alloc - sum(1 for k in keys
                                 if self.alloc.lookup(k) is not None)
-        return (keys, n_pb, n_total, missing)
+        return {"rung": rung, "keys": keys, "n_pb": n_pb, "n_alloc": n_alloc,
+                "missing": missing}
 
     def _fits(self, plan) -> bool:
-        return plan[3] <= self.alloc.n_free
+        return plan["missing"] <= self.alloc.n_free
 
-    def _place(self, slot: int, req: Request, pc, plan) -> None:
-        keys, n_pb, n_total, _ = plan
-        ids, mask = [], []
-        for i in range(n_total):
+    def _acquire_blocks(self, uid: int, plan):
+        """Claim the plan's blocks: shared ``acquire`` for full prompt
+        blocks, private ``alloc`` from the partial tail onward (decode
+        writes and diverged suffixes must never alias).  Returns
+        (ids, fresh) — ``fresh[i]`` False iff block i was pooled."""
+        keys = plan["keys"]
+        ids, fresh = [], []
+        for i in range(plan["n_alloc"]):
             if i < len(keys):
-                bid, fresh = self.alloc.acquire(keys[i])
-                self.stats["shared_blocks" if not fresh
+                bid, fr = self.alloc.acquire(keys[i])
+                self.stats["shared_blocks" if not fr
                            else "fresh_blocks"] += 1
             else:
-                # write frontier onward: always privately owned, so
-                # decode writes (and diverged suffixes) never alias
-                bid, fresh = self.alloc.alloc(), True
+                bid, fr = self.alloc.alloc(), True
                 self.stats["fresh_blocks"] += 1
             ids.append(bid)
-            if i < n_pb:
-                mask.append(fresh)
-        self._slot_blocks[req.uid] = ids
-        row = np.full((self.max_blocks,), pg.TRASH, np.int32)
-        row[:n_total] = ids
-        self.block_tables[slot] = row
+            fresh.append(fr)
+        self._slot_blocks[uid] = ids
         self.stats["peak_live_blocks"] = max(self.stats["peak_live_blocks"],
                                              self.alloc.n_live)
+        return ids, fresh
+
+    def _set_table_row(self, slot: int, ids) -> None:
+        row = np.full((self.max_blocks,), pg.TRASH, np.int32)
+        row[:len(ids)] = ids
+        self.block_tables[slot] = row
+
+    def _place(self, slot: int, req: Request, pc, plan) -> None:
+        ids, fresh = self._acquire_blocks(req.uid, plan)
+        n_pb = plan["n_pb"]
+        self._set_table_row(slot, ids)
         self.cache = self._admit_exec(req.prompt_len)(
             self.cache, pc, slot, jnp.asarray(ids[:n_pb], jnp.int32),
-            jnp.asarray(mask, jnp.bool_))
+            jnp.asarray(fresh[:n_pb], jnp.bool_))
+
+    def _admit_chunked_into(self, slot: int, req: Request, plan):
+        rung, bl = plan["rung"], self.block_len
+        W = -(-rung // bl)  # wide enough for every padded position
+        read = np.full((1, W), pg.TRASH, np.int32)
+        write = np.full((1, W), pg.TRASH, np.int32)
+        if self._has_paged:
+            ids, fresh = self._acquire_blocks(req.uid, plan)
+            # admission tables carry the PROMPT blocks only (n_pb <= W
+            # since pos0 <= rung): chunk writes never touch decode
+            # blocks — pads beyond the prompt land in the trash block —
+            # so eager mode's extra n_total - n_pb blocks stay out of
+            # the (rung-keyed, fixed-width) admission operands and only
+            # enter the segment tables below
+            n_pb = plan["n_pb"]
+            read[0, :n_pb] = ids[:n_pb]
+            write[0, :n_pb] = [bid if fr else pg.TRASH
+                               for bid, fr in zip(ids[:n_pb], fresh[:n_pb])]
+            self._set_table_row(slot, ids)
+        logits, self.cache = self._admit_exec(rung)(
+            self.params, self.cache, self._padded_batch(req, rung),
+            jnp.int32(req.prompt_len), jnp.int32(slot),
+            jnp.asarray(read), jnp.asarray(write))
+        return logits
+
+    def _rollback_place(self, slot: int, req: Request) -> None:
+        for bid in self._slot_blocks.pop(req.uid, []):
+            self.alloc.release(bid)
+        self.block_tables[slot] = pg.TRASH
+        self.pos[slot] = 0
 
     def _release_slot(self, slot: int) -> None:
         uid = int(self.slot_uid[slot])
@@ -460,6 +678,73 @@ class PagedServeEngine(ServeEngine):
         # dead lane: writes pin to (trash block, offset 0) until re-admitted
         self.block_tables[slot] = pg.TRASH
         self.pos[slot] = 0
+
+    # -- lazy per-segment block claiming + preemption ----------------------
+
+    def _segment_needs(self) -> Dict[int, int]:
+        """slot -> blocks to claim so the coming segment's writes stay
+        inside the slot's table (frontier can advance min(seg_len, rem)
+        positions; capacity-capped)."""
+        bl, needs = self.block_len, {}
+        for s in range(self.n_slots):
+            uid = int(self.slot_uid[s])
+            if uid < 0:
+                continue
+            adv = int(min(self.seg_len, self.rem[s]))
+            if adv <= 0:
+                continue
+            last_write = int(self.pos[s]) + adv - 1
+            n_total = self._n_total_blocks(self._live_req[uid])
+            need = min(last_write // bl + 1, n_total)
+            have = len(self._slot_blocks[uid])
+            if need > have:
+                needs[s] = need - have
+        return needs
+
+    def _preempt_youngest(self) -> None:
+        """Return the youngest-admitted live request to the queue (its
+        blocks go back to the pool; replay is deterministic, so its
+        final tokens are unaffected)."""
+        live = [s for s in range(self.n_slots) if self.slot_uid[s] >= 0]
+        if len(live) <= 1:
+            # unreachable: submit() rejects requests larger than the pool
+            raise RuntimeError("paged pool exhausted by a single request")
+        s = max(live, key=lambda s: self._slot_seq[s])
+        uid = int(self.slot_uid[s])
+        req = self._live_req.pop(uid)
+        # roll back the discarded work so token/utilization stats only
+        # count emissions that reach a completion (emission #1 came from
+        # the prefill, not a slot step)
+        discarded = self._out.pop(uid)
+        self.stats["generated_tokens"] -= len(discarded)
+        self.stats["live_slot_steps"] -= len(discarded) - 1
+        self._plen.pop(uid)
+        self._nseg.pop(uid)
+        self.slot_uid[s] = -1
+        self.rem[s] = 0
+        self._rollback_place(s, req)
+        self.queue.appendleft(req)  # admitted before anything still queued
+        self._pending.add(uid)
+        self.stats["preemptions"] += 1
+
+    def _pre_segment(self) -> None:
+        if not self._has_paged:
+            return
+        needs = self._segment_needs()
+        while sum(needs.values()) > self.alloc.n_free:
+            self._preempt_youngest()
+            needs = self._segment_needs()
+        for s, n in needs.items():
+            ids = self._slot_blocks[int(self.slot_uid[s])]
+            for _ in range(n):
+                bid = self.alloc.alloc()
+                self.block_tables[s, len(ids)] = bid
+                ids.append(bid)
+            self.stats["lazy_claimed_blocks"] += n
+            self.stats["fresh_blocks"] += n
+        if needs:
+            self.stats["peak_live_blocks"] = max(
+                self.stats["peak_live_blocks"], self.alloc.n_live)
 
     # -- scanned decode segment --------------------------------------------
 

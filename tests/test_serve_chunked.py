@@ -1,0 +1,358 @@
+"""Chunked prefill + prompt-length bucketing tests (ISSUE 5).
+
+Covers:
+  * per-family equivalence of ``prefill_chunked`` (prompt fed through
+    the decode body in fixed chunks, bucket-padded) against one-shot
+    ``prefill`` + graft: last-token logits agree to float tolerance,
+    greedy decode continuations are token-identical, and the ssm/hybrid
+    recurrent state carried across chunks matches (pads frozen out);
+  * the bucketed engines (contiguous and paged) emit token-identical
+    completions to the unbucketed engine while compiling O(#buckets)
+    admission executables instead of O(#distinct prompt lengths);
+  * paged lazy per-segment block claiming: admission holds only the
+    prompt's blocks, decode blocks are claimed as the frontier crosses
+    boundaries, prefix-shared preambles keep their refcounts straight,
+    and pool exhaustion preempts the youngest request which replays
+    deterministically;
+  * bucket-ladder properties: NO ladder ever truncates a prompt.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import PagedServeEngine, ServeEngine, Temperature
+from repro.serve import bucketing as bk
+
+# the six decode families of the ISSUE: plain attention, GQA with
+# sliding window + softcaps, MLA latent, ssm, hybrid, encdec
+CHUNK_FAMILY_ARCHS = [
+    "tinyllama-1.1b",    # attention (stacked KV blocks)
+    "gemma2-9b",         # GQA + local/global pattern + logit softcaps
+    "deepseek-v3-671b",  # MLA latent cache + leading dense layers
+    "mamba2-1.3b",       # ssm: recurrent state carried across chunks
+    "zamba2-7b",         # hybrid: shared-attn KV + mamba state carry
+    "whisper-small",     # encdec: encoder + cross KV once, chunked decoder
+]
+# engine equivalence adds the remaining cache layouts
+ENGINE_ARCHS = CHUNK_FAMILY_ARCHS + [
+    "qwen2-moe-a2.7b",   # moe routing under chunked admission
+    "paligemma-3b",      # vlm: patch rows inside the chunked sequence
+]
+
+
+def family_batch(cfg, P, seed=3):
+    toks = jax.random.randint(jax.random.PRNGKey(seed), (1, P), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks}
+    dt = jnp.dtype(cfg.dtype)
+    if cfg.arch_type == "vlm":
+        batch["patches"] = (jax.random.normal(
+            jax.random.PRNGKey(seed + 1),
+            (1, cfg.frontend_tokens, cfg.d_model)) * 0.05).astype(dt)
+    if cfg.arch_type == "encdec":
+        batch["frames"] = (jax.random.normal(
+            jax.random.PRNGKey(seed + 1),
+            (1, cfg.frontend_tokens, cfg.d_model)) * 0.05).astype(dt)
+    return batch
+
+
+def pad_for_chunks(cfg, batch, chunk_len):
+    """Right-pad tokens so offset + T is a chunk multiple (what the
+    engine's ``_padded_batch`` does through the bucket ladder)."""
+    off = M.decode_offset(cfg)
+    P = batch["tokens"].shape[1]
+    S_pad = -(-(off + P) // chunk_len) * chunk_len
+    toks = jnp.zeros((1, S_pad - off), jnp.int32).at[:, :P].set(
+        batch["tokens"])
+    out = dict(batch)
+    out["tokens"] = toks
+    return out
+
+
+@pytest.mark.parametrize("arch", CHUNK_FAMILY_ARCHS)
+def test_prefill_chunked_matches_one_shot(arch):
+    """P=9 is deliberately NOT a chunk multiple: the last chunk carries
+    bucket padding, which must not leak into logits, KV or state."""
+    cfg = get_config(arch, variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    P, G = 9, 5
+    batch = family_batch(cfg, P)
+    logits0, pc = M.prefill(params, cfg, batch)
+    cap = M.decode_capacity(cfg, P, G + 1)
+    pos0 = M.decode_pos0(cfg, P)
+    ref_cache = M.prefill_into_cache(cfg, M.init_decode_cache(cfg, 1, cap), pc)
+
+    outs = {}
+    for C in (2, 4):
+        lg, cache = jax.jit(
+            lambda p, c, b, C=C: M.prefill_chunked(p, cfg, c, b, P,
+                                                   chunk_len=C)
+        )(params, M.init_decode_cache(cfg, 1, cap),
+          pad_for_chunks(cfg, batch, C))
+        np.testing.assert_allclose(np.asarray(lg), np.asarray(logits0),
+                                   atol=2e-4, rtol=2e-4)
+        assert int(jnp.argmax(lg, -1)[0]) == int(jnp.argmax(logits0, -1)[0])
+        # recurrent leaves (ssm/hybrid state+conv) must match the one-shot
+        # prefill: chunk boundaries and pad freezing change float order
+        # only.  Attention leaves are checked via the decode continuation.
+        seq = M.decode_cache_seq_axes(cfg)
+        for rl, cl, ax in zip(jax.tree.leaves(ref_cache),
+                              jax.tree.leaves(cache),
+                              jax.tree.leaves(seq)):
+            if ax < 0 and rl.size:
+                np.testing.assert_allclose(
+                    np.asarray(cl, np.float32), np.asarray(rl, np.float32),
+                    atol=2e-2, rtol=2e-2)
+        res = M.generate(params, cfg, cache, jnp.argmax(logits0, -1),
+                         jnp.asarray([pos0]), steps=G)
+        outs[C] = np.asarray(res["tokens"])[0].tolist()
+    ref = M.generate(params, cfg, ref_cache, jnp.argmax(logits0, -1),
+                     jnp.asarray([pos0]), steps=G)
+    ref_toks = np.asarray(ref["tokens"])[0].tolist()
+    assert outs[2] == ref_toks and outs[4] == ref_toks
+
+
+def test_chunked_ssm_state_freezes_pads():
+    """The SSD recurrence integrates every token it sees; bucket pads
+    must contribute nothing to the carried state or the conv tail."""
+    cfg = get_config("mamba2-1.3b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    P, C = 7, 4  # one pad position in the last chunk
+    batch = family_batch(cfg, P)
+    _, pc = M.prefill(params, cfg, batch)
+    ref = M.prefill_into_cache(cfg, M.init_decode_cache(cfg, 1, 16), pc)
+    padded = pad_for_chunks(cfg, batch, C)
+    # poison the pad token: if it leaked into state/conv, this changes it
+    poisoned = dict(padded)
+    poisoned["tokens"] = padded["tokens"].at[0, P:].set(cfg.vocab_size - 1)
+    states = []
+    for b in (padded, poisoned):
+        _, cache = M.prefill_chunked(params, cfg,
+                                     M.init_decode_cache(cfg, 1, 16), b, P,
+                                     chunk_len=C)
+        states.append(cache)
+    a = jax.tree.leaves(states[0])
+    bzt = jax.tree.leaves(states[1])
+    for x, y in zip(a, bzt):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+    np.testing.assert_allclose(
+        np.asarray(states[0]["blocks"]["state"]),
+        np.asarray(ref["blocks"]["state"]), atol=1e-3, rtol=1e-3)
+    np.testing.assert_allclose(
+        np.asarray(states[0]["blocks"]["conv"], np.float32),
+        np.asarray(ref["blocks"]["conv"], np.float32), atol=1e-3, rtol=1e-3)
+
+
+def run_engine(cls, params, cfg, batches, lengths, max_len, **kw):
+    eng = cls(params, cfg, max_len=max_len, **kw)
+    for b, (_, g) in zip(batches, lengths):
+        eng.submit(b, max_new=g)
+    comps = eng.run()
+    return {u: c.tokens.tolist() for u, c in comps.items()}, eng
+
+
+@pytest.mark.parametrize("arch", ENGINE_ARCHS)
+def test_bucketed_engine_matches_unbucketed(arch):
+    """Contiguous + paged bucketed engines vs the unbucketed engine on
+    mixed-length traffic: token-identical completions, O(#buckets)
+    admission compiles."""
+    cfg = get_config(arch, variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    lengths = [(6, 4), (9, 6), (7, 5), (11, 3)]  # 4 distinct prompt lengths
+    batches = [family_batch(cfg, p, seed=10 + i)
+               for i, (p, _) in enumerate(lengths)]
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    ref, e0 = run_engine(ServeEngine, params, cfg, batches, lengths, max_len,
+                         n_slots=2, seg_len=3, seed=0)
+    buck, e1 = run_engine(ServeEngine, params, cfg, batches, lengths, max_len,
+                          n_slots=2, seg_len=3, seed=0, chunk_len=4)
+    paged, e2 = run_engine(PagedServeEngine, params, cfg, batches, lengths,
+                           max_len, n_slots=2, seg_len=3, seed=0, chunk_len=4,
+                           block_len=4)
+    assert buck == ref and paged == ref
+    # unbucketed: prefill + admit per distinct length; bucketed: one
+    # chunked-admit executable per bucket rung actually used
+    n_lengths = len({p for p, _ in lengths})
+    assert e0.compiles_built == 2 * n_lengths
+    assert e1.compiles_built <= len(e1.buckets)
+    assert e2.compiles_built <= len(e2.buckets)
+    assert e2.alloc.n_free == e2.alloc.n_blocks - 1  # fully drained
+
+
+def test_bucketed_sampling_matches_unbucketed():
+    """Stochastic sampling: the per-request key protocol is identical
+    under chunked admission, so temperature outputs match too."""
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    lengths = [(6, 5), (9, 4), (5, 6)]
+    batches = [family_batch(cfg, p, seed=30 + i)
+               for i, (p, _) in enumerate(lengths)]
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    kw = dict(n_slots=2, seg_len=3, seed=7, sampler=Temperature(0.8))
+    ref, _ = run_engine(ServeEngine, params, cfg, batches, lengths, max_len,
+                        **kw)
+    buck, _ = run_engine(ServeEngine, params, cfg, batches, lengths, max_len,
+                         chunk_len=4, **kw)
+    assert buck == ref
+
+
+def test_lazy_allocation_claims_blocks_per_segment():
+    """Lazy admission holds prompt blocks only; eager (lazy=False) holds
+    the worst case up front.  Same traffic, same outputs, lower peak."""
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    lengths = [(5, 16), (6, 16)]  # long max_new: big eager reservations
+    batches = [family_batch(cfg, p, seed=40 + i)
+               for i, (p, _) in enumerate(lengths)]
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    kw = dict(n_slots=2, seg_len=2, seed=0, block_len=4)
+    outs = {}
+    peaks = {}
+    for lazy in (False, True):
+        outs[lazy], eng = run_engine(PagedServeEngine, params, cfg, batches,
+                                     lengths, max_len, lazy=lazy, **kw)
+        peaks[lazy] = eng.stats["peak_live_blocks"]
+        assert eng.alloc.n_free == eng.alloc.n_blocks - 1
+        assert not eng._slot_blocks
+        if lazy:
+            assert eng.stats["lazy_claimed_blocks"] > 0
+    assert outs[True] == outs[False]
+    # eager peak covers both requests' full capacity; lazy peaks at the
+    # EOS-free frontier + one segment of lookahead
+    assert peaks[True] < peaks[False]
+
+
+def test_eager_blocks_with_chunked_admission():
+    """lazy=False + chunk_len: the admission tables carry only the
+    prompt blocks (the eager reservation can exceed the rung-wide
+    table when max_new is long — this used to crash), outputs still
+    match the unbucketed engine."""
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    lengths = [(5, 16), (6, 14)]  # capacity well past the prompt's rung
+    batches = [family_batch(cfg, p, seed=60 + i)
+               for i, (p, _) in enumerate(lengths)]
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    ref, _ = run_engine(ServeEngine, params, cfg, batches, lengths, max_len,
+                        n_slots=2, seg_len=3, seed=0)
+    eager, eng = run_engine(PagedServeEngine, params, cfg, batches, lengths,
+                            max_len, n_slots=2, seg_len=3, seed=0,
+                            block_len=4, chunk_len=4, lazy=False)
+    assert eager == ref
+    assert eng.stats["lazy_claimed_blocks"] == 0
+    assert eng.alloc.n_free == eng.alloc.n_blocks - 1
+
+
+def test_lazy_prefix_sharing_keeps_refcounts():
+    """Shared-preamble traffic through the lazy chunked paged engine:
+    preamble blocks pooled once, refcounts drain to zero, outputs match
+    the contiguous engine."""
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    rng = np.random.default_rng(0)
+    pre = rng.integers(0, cfg.vocab_size, (1, 8))  # 2 full blocks @ bl=4
+    gens = [5, 7, 4, 6]
+    batches, lengths = [], []
+    for g in gens:
+        sfx = rng.integers(0, cfg.vocab_size, (1, 4))
+        batches.append({"tokens": jnp.asarray(
+            np.concatenate([pre, sfx], 1), jnp.int32)})
+        lengths.append((12, g))
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    ref, _ = run_engine(ServeEngine, params, cfg, batches, lengths, max_len,
+                        n_slots=4, seg_len=3, seed=0)
+    paged, eng = run_engine(PagedServeEngine, params, cfg, batches, lengths,
+                            max_len, n_slots=4, seg_len=3, seed=0,
+                            block_len=4, chunk_len=4)
+    assert paged == ref
+    assert eng.stats["shared_blocks"] > 0
+    assert eng.alloc.n_free == eng.alloc.n_blocks - 1
+    assert not eng.alloc._bid_of and not eng.alloc._key_of
+    assert all(r == 0 for r in eng.alloc.refcount)
+
+
+def test_preemption_replays_identically():
+    """A pool too small for three long-running lazy requests forces
+    preemption; the preempted request replays deterministically, so the
+    completions still match the contiguous engine."""
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    lengths = [(8, 12), (8, 12), (8, 12)]
+    batches = [family_batch(cfg, p, seed=20 + i)
+               for i, (p, _) in enumerate(lengths)]
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    ref, _ = run_engine(ServeEngine, params, cfg, batches, lengths, max_len,
+                        n_slots=3, seg_len=4, seed=0)
+    # 10 allocatable blocks < 3 * ceil(20/4): someone must be preempted
+    pre, eng = run_engine(PagedServeEngine, params, cfg, batches, lengths,
+                          max_len, n_slots=3, seg_len=4, seed=0, block_len=4,
+                          n_blocks=11, chunk_len=4)
+    assert pre == ref
+    assert eng.stats["preemptions"] > 0
+    assert eng.alloc.n_free == eng.alloc.n_blocks - 1
+
+
+def test_engine_compile_count_is_bucket_bounded():
+    """12 distinct prompt lengths: the unbucketed engine builds 2 per
+    length, the bucketed engine at most one per ladder rung."""
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    lengths = [(p, 2) for p in range(4, 16)]
+    batches = [family_batch(cfg, p, seed=50 + i)
+               for i, (p, _) in enumerate(lengths)]
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    ref, e0 = run_engine(ServeEngine, params, cfg, batches, lengths, max_len,
+                         n_slots=2, seg_len=2, seed=0,
+                         compile_cache_size=64)
+    buck, e1 = run_engine(ServeEngine, params, cfg, batches, lengths, max_len,
+                          n_slots=2, seg_len=2, seed=0, chunk_len=4)
+    assert buck == ref
+    assert e0.compiles_built == 2 * len(lengths)
+    assert e1.compiles_built <= len(e1.buckets)
+    assert e1.compiles_built < e0.compiles_built
+
+
+# ---------------------------------------------------------------------------
+# bucket-ladder properties
+# ---------------------------------------------------------------------------
+
+def test_bucket_ladder_never_truncates():
+    """Property: for EVERY ladder and prompt length, the chosen bucket
+    is >= the length (no truncation) and a chunk multiple."""
+    for chunk in (1, 2, 3, 4, 8):
+        for max_len in (1, 7, 16, 100):
+            ladder = bk.bucket_ladder(chunk, max_len)
+            assert ladder[-1] >= max_len
+            for S in range(0, 2 * max_len + 1):
+                b = bk.bucket_for(S, ladder, chunk)
+                assert b >= S, (chunk, max_len, S, b)
+                assert b % chunk == 0
+    # custom (sparse, user-supplied) ladders: lengths past the top rung
+    # extend by chunk multiples instead of truncating
+    ladder = bk.validate_ladder([8, 32], 4)
+    for S in range(0, 100):
+        b = bk.bucket_for(S, ladder, 4)
+        assert b >= S and b % 4 == 0
+
+
+def test_bucket_ladder_validation():
+    with pytest.raises(ValueError, match="multiple"):
+        bk.validate_ladder([6], 4)
+    with pytest.raises(ValueError, match="empty"):
+        bk.validate_ladder([], 4)
+    with pytest.raises(ValueError, match="chunk_len"):
+        ServeEngine(None, get_config("tinyllama-1.1b", variant="reduced"),
+                    buckets=[8])
+
+
+def test_bucketed_engine_rejects_oversized_request():
+    """Capacity validation is bucket-independent: a prompt that fits no
+    cache row is rejected at submit, never silently truncated."""
+    cfg = get_config("tinyllama-1.1b", variant="reduced")
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    eng = ServeEngine(params, cfg, n_slots=1, max_len=16, chunk_len=4)
+    with pytest.raises(ValueError, match="capacity"):
+        eng.submit({"tokens": jnp.zeros((1, 12), jnp.int32)}, max_new=8)
