@@ -273,6 +273,20 @@ def serving_bucketed():
          row["traffic"]["n_distinct_lengths"])
 
 
+def serving_sharded():
+    """Decode-mesh serving (8 fake CPU devices in a child process):
+    sharded vs single-device tok/s and the EP-A2A overlap win.  Appends
+    the "sharded" row to BENCH_serve.json."""
+    from benchmarks.serving_sharded import serving_sharded_bench
+    row = serving_sharded_bench(log=_quiet)
+    for name, r in row["modes"].items():
+        emit(f"serve_sharded/{name}", r["wall_s"] * 1e6,
+             f"{r['tok_s']}tok/s")
+    emit("serve_sharded/speedup_overlap", 0.0, row["speedup_overlap"])
+    emit("serve_sharded/overlap_independent_dots", 0.0,
+         row["overlap_independent_dots"])
+
+
 def fleet_scaling(sizes=(8, 32, 64)):
     """Device-fleet wall-clock: sequential per-step loops vs the
     vmapped scan-epoch driver.  Also writes BENCH_fleet.json."""
@@ -297,6 +311,7 @@ ALL_BENCHES = {
     "serving": serving,
     "serving_paged": serving_paged,
     "serving_bucketed": serving_bucketed,
+    "serving_sharded": serving_sharded,
     "roofline": roofline,
 }
 

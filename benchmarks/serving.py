@@ -213,7 +213,7 @@ def serving_bench(n_requests: int = 10, *, n_slots: int = 4, seg_len: int = 8,
     if os.path.exists(out):  # keep the paged/bucketed rows across reruns
         with open(out) as f:
             prev = json.load(f)
-        for key in ("paged", "bucketed"):
+        for key in ("paged", "bucketed", "sharded"):
             if key in prev:
                 payload[key] = prev[key]
     with open(out, "w") as f:

@@ -30,19 +30,32 @@ def _on_cpu() -> bool:
     return jax.default_backend() == "cpu"
 
 
-def capacity_positions(flat_e, cap: int):
+def capacity_positions(flat_e, cap: int, valid=None):
     """Rank of each assignment within its expert + keep mask.
 
     flat_e: (N,) expert ids.  Returns (pos (N,) int32, keep (N,) bool)
     where ``pos`` is the arrival rank among equal expert ids (stable in
     token order — GShard drop semantics) and ``keep = pos < cap``.
+
+    ``valid`` (N,) bool marks assignments that exist at all (serving:
+    tokens from live engine slots).  Invalid assignments are ranked in a
+    sentinel bucket past every real expert id, so they consume NO
+    capacity rank inside any expert — a freed slot's garbage lane can
+    never crowd a live token out of an expert — and are always dropped
+    (``keep`` is False for them).
     """
     n = flat_e.shape[0]
-    order = jnp.argsort(flat_e, stable=True)
-    sorted_e = flat_e[order]
+    key = flat_e
+    if valid is not None:
+        key = jnp.where(valid, flat_e, jnp.iinfo(flat_e.dtype).max)
+    order = jnp.argsort(key, stable=True)
+    sorted_e = key[order]
     pos_sorted = jnp.arange(n) - jnp.searchsorted(sorted_e, sorted_e, "left")
     pos = jnp.zeros((n,), jnp.int32).at[order].set(pos_sorted.astype(jnp.int32))
-    return pos, pos < cap
+    keep = pos < cap
+    if valid is not None:
+        keep = keep & valid
+    return pos, keep
 
 
 @functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))

@@ -20,8 +20,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
-from repro.launch.mesh import make_host_mesh
+from repro.launch.mesh import make_decode_mesh, make_host_mesh
 from repro.models import model as M
+from repro.models.layers import paged_read_path
 from repro.serve import (Greedy, PagedServeEngine, ServeEngine, Temperature,
                          TopK)
 
@@ -88,16 +89,29 @@ def main():
     ap.add_argument("--check-unbucketed", action="store_true",
                     help="replay the same traffic through an unbucketed "
                          "engine and fail unless completions match")
+    ap.add_argument("--sharded", action="store_true",
+                    help="serve on the decode mesh (data x model over every "
+                         "visible device) instead of the flat host mesh")
+    ap.add_argument("--overlap-a2a", action="store_true",
+                    help="MoE decode: overlap the EP all-to-all with "
+                         "attention compute (batch-level split)")
+    ap.add_argument("--check-unsharded", action="store_true",
+                    help="replay the same traffic single-device (mesh=None, "
+                         "overlap off) and fail unless completions match")
     args = ap.parse_args()
     if args.buckets and not args.bucket:
         ap.error("--buckets requires --bucket")
     if args.check_unbucketed and not args.bucket:
         ap.error("--check-unbucketed requires --bucket")
+    if args.check_unsharded and not args.sharded:
+        ap.error("--check-unsharded requires --sharded")
 
     cfg = get_config(args.arch, variant=args.variant)
     if args.variant == "reduced":
         cfg = cfg.replace(vocab_size=args.vocab)
-    mesh = make_host_mesh()
+    if args.overlap_a2a:
+        cfg = cfg.replace(overlap_a2a=True)
+    mesh = make_decode_mesh() if args.sharded else make_host_mesh()
     rng = np.random.default_rng(0)
 
     P, G = args.prompt_len, args.gen
@@ -147,7 +161,12 @@ def main():
               f"shared={engine.stats['shared_blocks']} "
               f"lazy_claimed={engine.stats['lazy_claimed_blocks']} "
               f"preemptions={engine.stats['preemptions']} "
-              f"(free after drain: {engine.alloc.n_free})")
+              f"(free after drain: {engine.alloc.n_free}, "
+              f"read path: {paged_read_path(cfg, 1)}, "
+              f"allocator shards: {engine.alloc.n_shards})")
+    if args.sharded:
+        print(f"sharded: mesh={dict(mesh.shape)} "
+              f"overlap_a2a={cfg.overlap_a2a}")
     first = comps[min(comps)]
     print("sample:", first.tokens[:16])
     if args.check_unbucketed:
@@ -167,6 +186,28 @@ def main():
         print(f"check-unbucketed: completions match "
               f"({ref.compiles_built} reference compiles vs "
               f"{engine.compiles_built} bucketed)")
+    if args.check_unsharded:
+        ref_cfg = cfg.replace(overlap_a2a=False)
+        if args.paged:
+            ref = PagedServeEngine(
+                params, ref_cfg, n_slots=args.slots, max_len=max_len,
+                sampler=pick_sampler(args), seg_len=args.seg_len, mesh=None,
+                block_len=args.block_len, n_blocks=args.blocks or None,
+                lazy=not args.eager_blocks, **bucket_kw)
+        else:
+            ref = ServeEngine(params, ref_cfg, n_slots=args.slots,
+                              max_len=max_len, sampler=pick_sampler(args),
+                              seg_len=args.seg_len, mesh=None, **bucket_kw)
+        for b, (_, g) in zip(batches, lengths):
+            ref.submit(b, max_new=g)
+        ref_comps = ref.run()
+        got = {u: c.tokens.tolist() for u, c in comps.items()}
+        want = {u: c.tokens.tolist() for u, c in ref_comps.items()}
+        if got != want:
+            raise SystemExit(
+                f"sharded completions diverged from single-device: "
+                f"{got} != {want}")
+        print("check-unsharded: completions match")
 
 
 if __name__ == "__main__":

@@ -55,9 +55,21 @@ class ModelConfig:
     first_dense_layers: int = 0  # leading layers use dense FFN (deepseek)
     router_aux_coef: float = 0.01
     capacity_factor: float = 1.25
+    # size expert-parallel buffers to the worst case (t_loc * top_k per
+    # expert) so NO token is ever dropped.  Capacity drops are a
+    # training-time throughput tradeoff (GShard semantics); the serving
+    # engines force this on so sharded decode keeps single-device
+    # semantics exactly, at the cost of larger dispatch buffers.
+    moe_dropless: bool = False
     # expert-parallel implementation: "dense" (loop, small tests),
     # "a2a" (shard_map all-to-all, production) or "auto"
     moe_impl: str = "auto"
+    # EP-A2A overlap (decode): split the decode step into two batch
+    # halves whose MoE dispatch/FFN/combine stages are structurally
+    # independent, so one half's lax.all_to_all overlaps the other
+    # half's attention compute (Megatron-Core-style batch-level
+    # overlap).  Contiguous-cache decode on a multi-device mesh only.
+    overlap_a2a: bool = False
 
     # ---- multi-token prediction (DeepSeek-V3) ----------------------------
     n_mtp: int = 0

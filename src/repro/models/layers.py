@@ -14,6 +14,7 @@ O(S) per step and memory-light.
 """
 from __future__ import annotations
 
+import logging
 import math
 from typing import Optional
 
@@ -349,6 +350,35 @@ def paged_gather(pool, block_table):
     return pool[block_table].reshape((B, -1) + pool.shape[2:])
 
 
+_PAGED_PATH_LOGGED: set = set()
+
+
+def paged_read_path(cfg: ModelConfig, C: int, attn: str = "gqa") -> str:
+    """Which paged-attention read path serves this call: ``"pallas"``
+    (the scalar-prefetched single-query kernel) or ``"gather"`` (the
+    block-table gather reference).
+
+    The fallback selection is explicit — and logged once per distinct
+    reason — so sharded benches can report which path actually ran: the
+    Pallas kernel is single-query (C>1 chunked-prefill chunks read
+    through the gather) and GQA-layout only (MLA's latent cache attends
+    through the absorbed-matrix gather path).
+    """
+    if attn == "mla":
+        path, why = "gather", "MLA latent layout"
+    elif not cfg.use_pallas:
+        path, why = "gather", "use_pallas=False"
+    elif C != 1:
+        path, why = "gather", f"chunked prefill (C={C})"
+    else:
+        path, why = "pallas", "single-query decode"
+    if (path, why) not in _PAGED_PATH_LOGGED:
+        _PAGED_PATH_LOGGED.add((path, why))
+        logging.getLogger(__name__).info(
+            "paged_attn read path: %s (%s)", path, why)
+    return path
+
+
 def attention_decode(p, cfg: ModelConfig, x, pos, k_cache, v_cache, *,
                      window: int, mesh=None, block_table=None,
                      write_table=None):
@@ -379,9 +409,7 @@ def attention_decode(p, cfg: ModelConfig, x, pos, k_cache, v_cache, *,
         wt = block_table if write_table is None else write_table
         k_cache = paged_insert(k_cache, wt, pos, k)
         v_cache = paged_insert(v_cache, wt, pos, v)
-        if cfg.use_pallas and C == 1:
-            # the scalar-prefetch kernel is single-query; chunked prefill
-            # (C>1) reads through the gather reference below instead
+        if paged_read_path(cfg, C) == "pallas":
             from repro.kernels.paged_attn import ops as pa_ops
             out = pa_ops.paged_decode_attention(
                 q, k_cache, v_cache, block_table, pos[:, 0], window=window,
@@ -512,6 +540,7 @@ def mla_decode(p, cfg: ModelConfig, x, pos, ckv_cache, krope_cache,
         wt = block_table if write_table is None else write_table
         ckv_cache = paged_insert(ckv_cache, wt, pos, ckv_t)
         krope_cache = paged_insert(krope_cache, wt, pos, krope_t)
+        paged_read_path(cfg, x.shape[1], attn="mla")
         ckv_g = paged_gather(ckv_cache, block_table)
         krope_g = paged_gather(krope_cache, block_table)
     out = _mla_attend(p, cfg, x, pos, ckv_g, krope_g, mesh)

@@ -132,12 +132,14 @@ def _block_full(p, cfg: ModelConfig, x, positions, *, kind: str, mesh,
 
 
 def _block_decode(p, cfg: ModelConfig, x, pos, cache, *, kind: str, mesh,
-                  block_tables=None, write_tables=None):
+                  block_tables=None, write_tables=None, live=None):
     """Decode / chunked-prefill sub-layer.  x: (B, C, D), pos: (B, C) —
     C=1 is the single-token decode step.  cache: dict of per-layer
     tensors (contiguous (B, S, ...) rows, or block pools when
     ``block_tables`` (B, nbt) is given; ``write_tables`` diverts chunked
-    admission writes for already-pooled shared prefix blocks)."""
+    admission writes for already-pooled shared prefix blocks).
+    ``live`` (B, C) bool masks dead serving rows (freed slots, bucket
+    pads) out of MoE routing weights and expert-capacity accounting."""
     window = _window_for(cfg, kind)
     h = layers.apply_norm(p["ln1"], x)
     if cfg.attn_type == "mla":
@@ -157,7 +159,7 @@ def _block_decode(p, cfg: ModelConfig, x, pos, cache, *, kind: str, mesh,
     x = x + attn_out
     h = layers.apply_norm(p["ln2"], x)
     if "moe" in p:
-        ffn_out, _ = moe.apply_moe(p["moe"], cfg, h, mesh)
+        ffn_out, _ = moe.apply_moe(p["moe"], cfg, h, mesh, live=live)
     else:
         ffn_out = layers.apply_mlp(p["mlp"], cfg, h)
     if cfg.post_block_norm:
@@ -233,7 +235,7 @@ def _run_stack(blocks, cfg: ModelConfig, x, positions, *, pattern, mesh,
 
 
 def _decode_stack(blocks, cfg: ModelConfig, x, pos, cache, *, pattern, mesh,
-                  block_tables=None, write_tables=None):
+                  block_tables=None, write_tables=None, live=None):
     def body(x, inp):
         gp, gc = inp
         new_c = {}
@@ -241,7 +243,7 @@ def _decode_stack(blocks, cfg: ModelConfig, x, pos, cache, *, pattern, mesh,
             x, nc = _block_decode(gp[f"sub{i}"], cfg, x, pos, gc[f"sub{i}"],
                                   kind=pattern[i], mesh=mesh,
                                   block_tables=block_tables,
-                                  write_tables=write_tables)
+                                  write_tables=write_tables, live=live)
             new_c[f"sub{i}"] = nc
         return x, new_c
 
@@ -646,10 +648,32 @@ def prefill(params, cfg: ModelConfig, batch, *, mesh=None):
     return logits, caches
 
 
-def init_decode_cache(cfg: ModelConfig, B: int, S: int):
-    """Zeroed cache pytree for ``decode_step`` (capacity S)."""
+def _place_tree(tree, mesh, spec_tree):
+    """Lay a freshly-built cache tree out over ``mesh`` per the rules'
+    PartitionSpecs.  ``mesh=None`` (or a trivial 1-device mesh) is a
+    no-op, so single-device layouts stay bit-identical."""
+    if mesh is None or mesh.size == 1:
+        return tree
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)),
+        tree, spec_tree)
+
+
+def init_decode_cache(cfg: ModelConfig, B: int, S: int, mesh=None):
+    """Zeroed cache pytree for ``decode_step`` (capacity S).
+
+    With ``mesh`` the cache is laid out with ``NamedSharding`` per
+    ``sharding.rules.cache_specs`` — slot (batch) axes over the data
+    axes, sequence over "model" where divisible — instead of living on
+    one device.  ``mesh=None`` / 1-device meshes are unchanged.
+    """
     dtype = _dtype(cfg)
     at = cfg.arch_type
+    if mesh is not None and mesh.size > 1:
+        from repro.sharding import rules
+        tree = init_decode_cache(cfg, B, S)
+        specs = rules.cache_specs(tree, mesh, batch=B, seq=S)
+        return _place_tree(tree, mesh, specs)
 
     def attn_entry():
         return _attn_cache_struct(cfg, B, S, dtype)
@@ -849,7 +873,7 @@ def has_paged_leaves(cfg: ModelConfig) -> bool:
 
 
 def init_paged_cache(cfg: ModelConfig, n_slots: int, n_blocks: int,
-                     block_len: int):
+                     block_len: int, mesh=None):
     """Block-paged decode cache.
 
     Sequence-carrying leaves become per-leaf block pools: the contiguous
@@ -859,12 +883,26 @@ def init_paged_cache(cfg: ModelConfig, n_slots: int, n_blocks: int,
     axis (ssm/hybrid recurrent state, encdec cross KV + memory) keep
     their per-slot batch axis of ``n_slots``.  Block 0 is the trash
     block: never allocated, it absorbs the masked writes of finished
-    slots (see ``repro.serve.paged``)."""
+    slots (see ``repro.serve.paged``).
+
+    With ``mesh`` the layout follows ``sharding.rules.paged_cache_specs``:
+    each device owns a contiguous shard of every block pool (the
+    allocator's per-shard free lists mirror this split) and pool feature
+    dims shard over "model"; slot-resident leaves shard their slot axis
+    over the data axes.  ``mesh=None`` / 1-device meshes are unchanged.
+    """
     pool = init_decode_cache(cfg, n_blocks, block_len)
     slotted = init_decode_cache(cfg, n_slots, block_len)
     seq = decode_cache_seq_axes(cfg)
-    return jax.tree.map(lambda p, s, ax: p if ax >= 0 else s,
+    tree = jax.tree.map(lambda p, s, ax: p if ax >= 0 else s,
                         pool, slotted, seq)
+    if mesh is not None and mesh.size > 1:
+        from repro.sharding import rules
+        specs = rules.paged_cache_specs(tree, mesh,
+                                        batch_axes=decode_cache_batch_axes(cfg),
+                                        seq_axes=seq)
+        return _place_tree(tree, mesh, specs)
+    return tree
 
 
 def scatter_prefill_paged(cfg: ModelConfig, paged_cache, sub, slot, ids,
@@ -910,8 +948,59 @@ def paged_cache_nbytes(cfg: ModelConfig, n_slots: int, n_blocks: int,
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
 
 
+def _overlap_ok(cfg: ModelConfig, mesh, B: int, block_tables) -> bool:
+    """Gate for the EP-A2A overlapped decode step.
+
+    Contiguous-cache MoE decode on a multi-device "model" axis only, and
+    the batch must split into two equal halves.  Paged caches are
+    excluded: both halves would scatter into the SAME trash block row,
+    and merging the two written pools is not expressible as a concat.
+    """
+    if not (cfg.overlap_a2a and cfg.is_moe and block_tables is None):
+        return False
+    if cfg.moe_impl not in ("auto", "a2a"):
+        return False
+    if mesh is None or "model" not in mesh.axis_names:
+        return False
+    return mesh.shape["model"] > 1 and B >= 2 and B % 2 == 0
+
+
+def _decode_step_overlapped(params, cfg: ModelConfig, cache, x, pos, *,
+                            mesh, live):
+    """Batch-level EP-A2A overlap (Megatron-Core style): run the decode
+    body on two independent batch halves, each with its own cache slice.
+    The halves share no data flow, so XLA's latency-hiding scheduler can
+    run half 0's MoE ``all_to_all`` concurrently with half 1's attention
+    compute (asserted at the HLO level by
+    ``launch.hlo_analysis.assert_a2a_overlap``).
+
+    Expert capacity is computed per half (over B/2 rows), so this is NOT
+    bitwise-identical to the unsplit step when drops occur; at serving
+    batch sizes the per-half capacity ceil is the same and outputs match
+    (the sharded identity tests exercise exactly this).
+    """
+    B = x.shape[0]
+    half = B // 2
+    bat = decode_cache_batch_axes(cfg)
+
+    def run(lo, hi):
+        c = jax.tree.map(
+            lambda leaf, ax: jax.lax.slice_in_dim(leaf, lo, hi, axis=ax),
+            cache, bat)
+        lv = None if live is None else live[lo:hi]
+        return _chunk_hidden(params, cfg, c, x[lo:hi], pos[lo:hi],
+                             mesh=mesh, live=lv)
+
+    h0, nc0 = run(0, half)
+    h1, nc1 = run(half, B)
+    h = jnp.concatenate([h0, h1], axis=0)
+    new_cache = jax.tree.map(
+        lambda a, b, ax: jnp.concatenate([a, b], axis=ax), nc0, nc1, bat)
+    return h, new_cache
+
+
 def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, mesh=None,
-                block_tables=None):
+                block_tables=None, live=None):
     """One serving step: tokens (B, 1) at positions pos (B,).
 
     With ``block_tables`` (B, nbt) the cache is the paged layout of
@@ -919,18 +1008,31 @@ def decode_step(params, cfg: ModelConfig, cache, tokens, pos, *, mesh=None,
     through the table; slot-resident leaves (ssm state, encdec
     cross/memory) are indexed by batch row exactly as before.
 
+    ``live`` (B,) bool marks rows holding real requests; freed engine
+    slots are masked out of MoE routing and expert-capacity accounting
+    (``live=None`` treats every row as live — bit-identical to the
+    pre-mask behavior).
+
     Returns (logits (B, V), new_cache).  This is the C=1 case of the
     shared ``_chunk_hidden`` body that chunked prefill feeds C-token
     chunks through.
     """
     x = _embed(params, cfg, tokens)
-    h, new_cache = _chunk_hidden(params, cfg, cache, x, pos[:, None],
-                                 mesh=mesh, block_tables=block_tables)
+    lv = None if live is None else live[:, None]
+    if _overlap_ok(cfg, mesh, x.shape[0], block_tables):
+        h, new_cache = _decode_step_overlapped(params, cfg, cache, x,
+                                               pos[:, None], mesh=mesh,
+                                               live=lv)
+    else:
+        h, new_cache = _chunk_hidden(params, cfg, cache, x, pos[:, None],
+                                     mesh=mesh, block_tables=block_tables,
+                                     live=lv)
     return _head(params, cfg, h)[:, 0], new_cache
 
 
 def _chunk_hidden(params, cfg: ModelConfig, cache, x, pos, *, mesh=None,
-                  block_tables=None, write_tables=None, n_valid=None):
+                  block_tables=None, write_tables=None, n_valid=None,
+                  live=None):
     """Shared decode / chunked-prefill body: pre-embedded inputs x
     (B, C, D) at positions pos (B, C), written into (and attended
     against) the decode cache.  Returns (final-normed hidden (B, C, D),
@@ -942,20 +1044,26 @@ def _chunk_hidden(params, cfg: ModelConfig, cache, x, pos, *, mesh=None,
     every live query's visibility), but the ssm/hybrid recurrence
     integrates everything it sees, so ``n_valid`` (B,) freezes state
     and conv-tail updates for pad positions (see ssm_prefill_chunk).
+
+    ``live`` (B, C) bool masks dead rows/positions out of MoE routing
+    and capacity; when omitted it is derived from ``n_valid`` (bucket
+    pads past the real prompt are dead for routing purposes too).
     """
     at = cfg.arch_type
     C = x.shape[1]
+    if live is None and n_valid is not None:
+        live = jnp.arange(C)[None, :] < n_valid[:, None]
 
     if at in ("dense", "moe", "vlm"):
         if "dense_blocks" in params:
             x, c0 = _decode_stack(params["dense_blocks"], cfg, x, pos,
                                   cache["dense_blocks"], pattern=("full",),
                                   mesh=mesh, block_tables=block_tables,
-                                  write_tables=write_tables)
+                                  write_tables=write_tables, live=live)
         x, c1 = _decode_stack(params["blocks"], cfg, x, pos, cache["blocks"],
                               pattern=cfg.attn_pattern, mesh=mesh,
                               block_tables=block_tables,
-                              write_tables=write_tables)
+                              write_tables=write_tables, live=live)
         new_cache = {"blocks": c1}
         if "dense_blocks" in params:
             new_cache["dense_blocks"] = c0
@@ -970,7 +1078,7 @@ def _chunk_hidden(params, cfg: ModelConfig, cache, x, pos, *, mesh=None,
         x, new_cache = _hybrid_decode(params, cfg, x, pos, cache, mesh=mesh,
                                       block_tables=block_tables,
                                       write_tables=write_tables,
-                                      n_valid=n_valid)
+                                      n_valid=n_valid, live=live)
     elif at == "encdec":
         x, new_cache = _encdec_decode(params, cfg, x, pos, cache, mesh=mesh,
                                       block_tables=block_tables,
@@ -991,7 +1099,8 @@ def _ssm_step(bp, cfg: ModelConfig, x, bc, C: int, n_valid):
 
 
 def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
-                   block_tables=None, write_tables=None, n_valid=None):
+                   block_tables=None, write_tables=None, n_valid=None,
+                   live=None):
     shared = params["shared_attn"]
     C = x.shape[1]
 
@@ -1004,7 +1113,7 @@ def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
         gp, gc, ac = inp
         x, nac = _block_decode(shared, cfg, x, pos, ac, kind="full", mesh=mesh,
                                block_tables=block_tables,
-                               write_tables=write_tables)
+                               write_tables=write_tables, live=live)
         x, ngc = _scan(cfg, mamba_body, x, (gp, gc))
         return x, (ngc, nac)
 
@@ -1019,7 +1128,7 @@ def _hybrid_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
         tail_attn = jax.tree.map(lambda t: t[n_groups], attn_cache)
         x, nta = _block_decode(shared, cfg, x, pos, tail_attn, kind="full",
                                mesh=mesh, block_tables=block_tables,
-                               write_tables=write_tables)
+                               write_tables=write_tables, live=live)
         x, ntc = _scan(cfg, mamba_body, x, (params["mamba_tail"], cache["tail"]))
         new_cache["tail"] = ntc
         new_cache["attn"] = jax.tree.map(
@@ -1185,11 +1294,12 @@ def _scan_generate(params, cfg: ModelConfig, cache, tok, pos, rem, done,
 
     def body(carry, _):
         tok, pos, rem, done, keys, cache = carry
+        live = ~done
         logits, cache = decode_step(params, cfg, cache, tok[:, None], pos,
-                                    mesh=mesh, block_tables=block_tables)
+                                    mesh=mesh, block_tables=block_tables,
+                                    live=live)
         ks = jax.vmap(lambda k: jax.random.split(k, 2))(keys)
         sampled = sampler(ks[:, 0], logits)
-        live = ~done
         rem2 = rem - live.astype(rem.dtype)
         done2 = done | (live & ((sampled == eos) | (rem2 <= 0)))
         tok2 = jnp.where(live, sampled, tok)

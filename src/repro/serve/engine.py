@@ -26,13 +26,20 @@ capacity spans, identical prompt prefixes are pooled once (refcounted,
 copy-on-write resolved at admission), and slot count is bounded by live
 tokens rather than ``n_slots * max_len``.
 
-Slot independence: attention/SSM state and (single-device) MoE routing
-never mix batch rows, so a request's tokens are identical to a solo run
-with the same per-request PRNG key (tests/test_serve_engine.py asserts
-this).  Caveat: the multi-device ``moe_a2a`` path computes expert
-capacity over ALL batch rows, so freed garbage lanes could crowd live
-tokens out of an expert there — sharded decode is a ROADMAP follow-on
-and needs live-token-masked routing first.
+Slot independence: attention/SSM state and MoE routing never mix batch
+rows — the decode scan threads a per-row liveness mask (``~done``) into
+``decode_step``, so freed garbage lanes are zeroed out of router
+probabilities AND excluded from expert-capacity ranking on every MoE
+path, including the multi-device ``moe_a2a`` one (a freed slot can
+never crowd a live token out of an expert; see
+tests/test_serve_sharded.py).  A request's tokens are therefore
+identical to a solo run with the same per-request PRNG key.
+
+Sharded serving: pass ``mesh=`` and the engine lays its decode cache
+(or block pools) out with ``NamedSharding`` per ``sharding.rules`` —
+slots over the data axes, pool/feature dims over "model" — and every
+compiled admit/segment executable runs sharded.  A 1-device mesh is
+bit-identical to ``mesh=None``.
 """
 from __future__ import annotations
 
@@ -165,6 +172,11 @@ class ServeEngine:
                  history_limit: int = 4096, compile_cache_size: int = 32,
                  chunk_len: Optional[int] = None, buckets=None):
         cfg.validate()
+        if cfg.is_moe and not cfg.moe_dropless:
+            # capacity drops are a training-time tradeoff; serving must
+            # keep single-device semantics on any mesh, so expert
+            # buffers are sized worst-case (no token ever dropped)
+            cfg = cfg.replace(moe_dropless=True)
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_len, self.seg_len = n_slots, max_len, seg_len
         self.sampler = sampler if sampler is not None else Greedy()
@@ -217,7 +229,24 @@ class ServeEngine:
     # -- cache layout hooks (overridden by PagedServeEngine) ---------------
 
     def _init_cache(self) -> None:
-        self.cache = M.init_decode_cache(self.cfg, self.n_slots, self.max_len)
+        self.cache = M.init_decode_cache(self.cfg, self.n_slots, self.max_len,
+                                         mesh=self.mesh)
+        self._cache_shardings = self._shardings_of(self.cache)
+
+    def _shardings_of(self, cache):
+        """Per-leaf NamedShardings of the engine cache (None when
+        single-device).  Captured once at init: cache donation makes
+        every compiled segment/admit preserve this placement, and the
+        admit builders re-constrain their outputs to it as insurance."""
+        if self.mesh is None or self.mesh.size == 1:
+            return None
+        return jax.tree.map(lambda x: x.sharding, cache)
+
+    def _constrain_cache(self, cache):
+        if self._cache_shardings is None:
+            return cache
+        return jax.tree.map(jax.lax.with_sharding_constraint, cache,
+                            self._cache_shardings)
 
     def _build_prefill(self, P: int):
         cfg, mesh = self.cfg, self.mesh
@@ -243,7 +272,8 @@ class ServeEngine:
         def admit(cache, pc, slot):
             sub = M.prefill_into_cache(
                 cfg, M.init_decode_cache(cfg, 1, max_len), pc)
-            return _scatter_slot_row(cache, sub, slot, axes)
+            return self._constrain_cache(_scatter_slot_row(cache, sub, slot,
+                                                           axes))
 
         return jax.jit(admit, donate_argnums=(0,))
 
@@ -258,7 +288,9 @@ class ServeEngine:
             logits, sub = M.prefill_chunked(params, cfg, sub, batch,
                                             prompt_len, chunk_len=C,
                                             mesh=mesh)
-            return logits, _scatter_slot_row(cache, sub, slot, axes)
+            cache = self._constrain_cache(
+                _scatter_slot_row(cache, sub, slot, axes))
+            return logits, cache
 
         return jax.jit(admit, donate_argnums=(1,))
 
@@ -422,6 +454,11 @@ class ServeEngine:
     def _segment(self) -> None:
         res = self._run_segment()
         self.cache = res["cache"]
+        if self._cache_shardings is not None:
+            # the scanned segment's output shardings are the compiler's
+            # choice; re-pin the engine layout (no-op when unchanged)
+            self.cache = jax.tree.map(jax.device_put, self.cache,
+                                      self._cache_shardings)
         toks, valid = np.asarray(res["tokens"]), np.asarray(res["valid"])
         done = np.asarray(res["done"])
         # writable copies — _admit() mutates these per slot
@@ -503,7 +540,20 @@ class PagedServeEngine(ServeEngine):
         self._has_paged = M.has_paged_leaves(cfg)
         self.share_prefix = share_prefix and self._has_paged
         self.lazy = lazy and self._has_paged
-        self.alloc = pg.PagedAllocator(self.n_blocks, block_len)
+        # per-shard free lists mirror the pool sharding: each device owns
+        # a contiguous run of block ids (rules.paged_cache_specs), so the
+        # allocator can keep every shard's block population balanced
+        mesh = kw.get("mesh")
+        n_shards = 1
+        if mesh is not None and mesh.size > 1:
+            n_data = 1
+            for a in ("pod", "data"):
+                if a in mesh.axis_names:
+                    n_data *= mesh.shape[a]
+            if n_data > 1 and self.n_blocks % n_data == 0:
+                n_shards = n_data
+        self.alloc = pg.PagedAllocator(self.n_blocks, block_len,
+                                       n_shards=n_shards)
         self.block_tables = np.full((n_slots, self.max_blocks), pg.TRASH,
                                     np.int32)
         self._slot_blocks: Dict[int, List[int]] = {}  # uid -> held block ids
@@ -516,7 +566,8 @@ class PagedServeEngine(ServeEngine):
 
     def _init_cache(self) -> None:
         self.cache = M.init_paged_cache(self.cfg, self.n_slots, self.n_blocks,
-                                        self.block_len)
+                                        self.block_len, mesh=self.mesh)
+        self._cache_shardings = self._shardings_of(self.cache)
 
     def _build_admit(self, key):
         if self.chunk_len is not None:
@@ -527,8 +578,9 @@ class PagedServeEngine(ServeEngine):
         def admit(cache, pc, slot, ids, mask):
             sub = M.prefill_into_cache(
                 cfg, M.init_decode_cache(cfg, 1, n_pb * bl), pc)
-            return M.scatter_prefill_paged(cfg, cache, sub, slot, ids, mask,
-                                           block_len=bl)
+            return self._constrain_cache(
+                M.scatter_prefill_paged(cfg, cache, sub, slot, ids, mask,
+                                        block_len=bl))
 
         return jax.jit(admit, donate_argnums=(0,))
 
@@ -554,7 +606,9 @@ class PagedServeEngine(ServeEngine):
                                             prompt_len, chunk_len=C,
                                             mesh=mesh, block_tables=read_tbl,
                                             write_tables=write_tbl)
-            return logits, _scatter_slot_row(cache, sub, slot, bat, seq)
+            cache = self._constrain_cache(
+                _scatter_slot_row(cache, sub, slot, bat, seq))
+            return logits, cache
 
         return jax.jit(admit, donate_argnums=(1,))
 

@@ -29,30 +29,58 @@ TRASH = 0  # pool row 0: absorbs dead slots' masked writes, never allocated
 
 class PagedAllocator:
     """Free-list + refcount bookkeeping over ``n_blocks`` pool rows
-    (ids 1..n_blocks-1; row 0 is the trash block)."""
+    (ids 1..n_blocks-1; row 0 is the trash block).
 
-    def __init__(self, n_blocks: int, block_len: int):
+    ``n_shards > 1`` matches a mesh-sharded pool
+    (``sharding.rules.paged_cache_specs``): device d owns the contiguous
+    id range [d * n_blocks/n_shards, (d+1) * n_blocks/n_shards), and the
+    allocator keeps one free list per shard, handing new blocks out of
+    the emptiest shard so live blocks — and therefore paged-attention
+    read traffic — stay balanced across devices.  ``n_shards=1`` is the
+    single-device allocator, id-for-id identical to before the split.
+    """
+
+    def __init__(self, n_blocks: int, block_len: int, n_shards: int = 1):
         if n_blocks < 2:
             raise ValueError("need at least 2 blocks (one is the trash block)")
         if block_len < 1:
             raise ValueError("block_len must be >= 1")
+        if n_shards < 1 or n_blocks % n_shards:
+            raise ValueError(
+                f"n_blocks {n_blocks} must divide into n_shards {n_shards}")
         self.n_blocks, self.block_len = n_blocks, block_len
-        # pop() hands out low ids first
-        self._free: List[int] = list(range(n_blocks - 1, 0, -1))
+        self.n_shards = n_shards
+        self._per_shard = n_blocks // n_shards
+        # per-shard free lists; pop() hands out each shard's low ids
+        # first.  The trash block (id 0) sits in shard 0 and is skipped.
+        self._free_by_shard: List[List[int]] = [
+            list(range(min((d + 1) * self._per_shard - 1, n_blocks - 1),
+                       max(d * self._per_shard - 1, 0), -1))
+            for d in range(n_shards)]
         self.refcount = [0] * n_blocks
         self._key_of: Dict[int, Tuple] = {}
         self._bid_of: Dict[Tuple, int] = {}
         self.shared_hits = 0
 
+    def shard_of(self, bid: int) -> int:
+        return bid // self._per_shard
+
     # -- capacity ----------------------------------------------------------
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        return sum(len(f) for f in self._free_by_shard)
+
+    def n_free_shard(self, shard: int) -> int:
+        return len(self._free_by_shard[shard])
+
+    def free_ids(self) -> List[int]:
+        """Every free block id, across all shards (introspection)."""
+        return [b for f in self._free_by_shard for b in f]
 
     @property
     def n_live(self) -> int:
-        return (self.n_blocks - 1) - len(self._free)
+        return (self.n_blocks - 1) - self.n_free
 
     def lookup(self, key) -> Optional[int]:
         """Block id pooled under ``key``, or None (refcount untouched)."""
@@ -61,10 +89,14 @@ class PagedAllocator:
     # -- alloc / share / free ----------------------------------------------
 
     def alloc(self) -> int:
-        """A private (unkeyed, refcount-1) block."""
-        if not self._free:
+        """A private (unkeyed, refcount-1) block, from the shard with the
+        most free blocks (lowest shard index on ties — with one shard
+        this degenerates to the original single free list)."""
+        shard = max(range(self.n_shards),
+                    key=lambda d: (len(self._free_by_shard[d]), -d))
+        if not self._free_by_shard[shard]:
             raise RuntimeError("paged KV pool exhausted")
-        bid = self._free.pop()
+        bid = self._free_by_shard[shard].pop()
         self.refcount[bid] = 1
         return bid
 
@@ -96,7 +128,7 @@ class PagedAllocator:
             key = self._key_of.pop(bid, None)
             if key is not None:
                 del self._bid_of[key]
-            self._free.append(bid)
+            self._free_by_shard[self.shard_of(bid)].append(bid)
 
 
 def prompt_digest(batch) -> bytes:

@@ -195,3 +195,42 @@ def cache_specs(cache, mesh: Mesh, *, batch: int, seq: int):
         return P(*s)
 
     return jax.tree.map(spec, cache)
+
+
+def paged_cache_specs(cache, mesh: Mesh, *, batch_axes, seq_axes):
+    """Paged-cache sharding: block pools + slot-resident leaves.
+
+    ``batch_axes`` / ``seq_axes`` are the per-leaf axis trees from
+    ``models.model.decode_cache_batch_axes`` / ``decode_cache_seq_axes``
+    (the paged layout keeps the contiguous layout's axis positions: the
+    batch axis holds ``n_blocks`` for pool leaves, ``n_slots`` for
+    slot-resident ones).
+
+    Pool leaves (seq axis >= 0): the ``n_blocks`` dim shards over the
+    data axes — each device owns a CONTIGUOUS run of block ids, which is
+    exactly the split ``serve.paged.PagedAllocator``'s per-shard free
+    lists track — and the trailing feature dim shards over "model" when
+    divisible (KV heads x head_dim, MLA latent width).  Slot-resident
+    leaves (seq axis < 0: ssm/hybrid state, encdec cross KV + memory)
+    shard their ``n_slots`` dim over the data axes like the contiguous
+    cache.  Non-divisible dims replicate — never an error.
+    """
+    daxes = data_axes_of(mesh)
+    n_data = 1
+    for a in daxes:
+        n_data *= mesh.shape[a]
+    model = mesh.shape.get("model", 1)
+    dax = daxes if len(daxes) > 1 else (daxes[0] if daxes else None)
+
+    def spec(leaf, bax, sax):
+        s = [None] * leaf.ndim
+        if n_data > 1 and leaf.shape[bax] % n_data == 0:
+            s[bax] = dax
+        if sax >= 0 and model > 1:
+            last = leaf.ndim - 1
+            if last != bax and s[last] is None \
+               and leaf.shape[last] % model == 0 and leaf.shape[last] >= model:
+                s[last] = "model"
+        return P(*s)
+
+    return jax.tree.map(spec, cache, batch_axes, seq_axes)

@@ -156,7 +156,7 @@ def test_allocator_refcounts_and_double_free():
     assert al.refcount[a] == 1 and al.lookup(("k", 1)) == a
     al.release(a)  # refcount 0 <=> no holder left: key evicted, block freed
     assert al.refcount[a] == 0 and al.lookup(("k", 1)) is None
-    assert a in al._free
+    assert a in al.free_ids()
     with pytest.raises(ValueError, match="double free"):
         al.release(a)
     with pytest.raises(ValueError, match="trash"):
