@@ -26,7 +26,8 @@ BENCH_FILES = ("BENCH_serve.json", "BENCH_fleet.json")
 # counts (deterministic — any growth is a real compile-bound
 # regression).  Absolute tok_s is reported as INFO only; its
 # regressions surface through the speedup ratios computed in-run.
-HIGHER_KEYS = ("speedup", "concurrency_gain", "compile_reduction")
+HIGHER_KEYS = ("speedup", "concurrency_gain", "compile_reduction",
+               "acceptance_rate")
 LOWER_KEYS = ("compiles",)
 INFO_KEYS = ("tok_s",)
 

@@ -24,6 +24,23 @@ def _quiet(*a, **k):
     pass
 
 
+def summary(bench: str, modes: dict, *, baseline: str | None = None,
+            **extras):
+    """One greppable line per mode at the end of each serving bench run —
+    nightly logs answer "what did mode X serve tonight" with a grep for
+    ``SUMMARY`` instead of parsing BENCH_serve.json.  ``baseline`` names
+    the mode the per-mode speedup is computed against; ``extras`` are
+    bench-level ratios appended as their own line."""
+    base = modes.get(baseline, {}).get("tok_s") if baseline else None
+    for name, r in modes.items():
+        tok = r.get("tok_s")
+        sp = f"{tok / base:.2f}x" if base and tok else "n/a"
+        print(f"SUMMARY {bench} mode={name} tok_s={tok} speedup={sp}",
+              flush=True)
+    for key, val in extras.items():
+        print(f"SUMMARY {bench} {key}={val}", flush=True)
+
+
 # ---------------------------------------------------------------------------
 # Tables I / II + Fig. 9 — method comparison across system scales
 # ---------------------------------------------------------------------------
@@ -243,6 +260,7 @@ def serving():
         emit(f"serve/{mode}", row["wall_s"] * 1e6, f"{row['tok_s']}tok/s")
     emit("serve/speedup_scan_vs_loop", 0.0, res["speedup_scan_vs_loop"])
     emit("serve/speedup_cb_vs_loop", 0.0, res["speedup_cb_vs_loop"])
+    summary("serving", res["modes"], baseline="python_loop")
 
 
 def serving_paged():
@@ -257,6 +275,9 @@ def serving_paged():
              f"bytes={row[name]['cache_bytes']}")
     emit("serve_paged/shared_blocks", 0.0,
          row["paged_engine"]["shared_blocks"])
+    summary("serving_paged",
+            {"contiguous": row["contiguous"], "paged": row["paged_engine"]},
+            baseline="contiguous", concurrency_gain=row["concurrency_gain"])
 
 
 def serving_bucketed():
@@ -271,6 +292,8 @@ def serving_bucketed():
     emit("serve_bucketed/n_buckets", 0.0, len(row["engine"]["buckets"]))
     emit("serve_bucketed/n_distinct_lengths", 0.0,
          row["traffic"]["n_distinct_lengths"])
+    summary("serving_bucketed", row["modes"], baseline="unbucketed",
+            compile_reduction_ratio=row["compile_reduction_ratio"])
 
 
 def serving_sharded():
@@ -285,6 +308,23 @@ def serving_sharded():
     emit("serve_sharded/speedup_overlap", 0.0, row["speedup_overlap"])
     emit("serve_sharded/overlap_independent_dots", 0.0,
          row["overlap_independent_dots"])
+    summary("serving_sharded", row["modes"], baseline="single",
+            speedup_overlap=row["speedup_overlap"])
+
+
+def serving_speculative():
+    """Self-speculative MTP decode (draft k + verify in one compiled
+    step) vs plain continuous batching, greedy outputs asserted
+    identical.  Appends the "speculative" row to BENCH_serve.json."""
+    from benchmarks.serving import serving_speculative_bench
+    row = serving_speculative_bench(log=_quiet)
+    for name, r in row["modes"].items():
+        emit(f"serve_spec/{name}", r["wall_s"] * 1e6, f"{r['tok_s']}tok/s")
+    emit("serve_spec/acceptance_rate", 0.0, row["acceptance_rate"])
+    emit("serve_spec/speedup_spec_vs_cb", 0.0, row["speedup_spec_vs_cb"])
+    summary("serving_speculative", row["modes"], baseline="continuous",
+            acceptance_rate=row["acceptance_rate"],
+            outputs_match_unspeculated=row["outputs_match_unspeculated"])
 
 
 def fleet_scaling(sizes=(8, 32, 64)):
@@ -312,6 +352,7 @@ ALL_BENCHES = {
     "serving_paged": serving_paged,
     "serving_bucketed": serving_bucketed,
     "serving_sharded": serving_sharded,
+    "serving_speculative": serving_speculative,
     "roofline": roofline,
 }
 

@@ -213,7 +213,7 @@ def serving_bench(n_requests: int = 10, *, n_slots: int = 4, seg_len: int = 8,
     if os.path.exists(out):  # keep the paged/bucketed rows across reruns
         with open(out) as f:
             prev = json.load(f)
-        for key in ("paged", "bucketed", "sharded"):
+        for key in ("paged", "bucketed", "sharded", "speculative"):
             if key in prev:
                 payload[key] = prev[key]
     with open(out, "w") as f:
@@ -339,6 +339,158 @@ def serving_paged_bench(n_requests: int = 12, *, n_slots: int = 4,
         f"requests vs {n_slots} contiguous slots at "
         f"{paged_bytes}/{contig_bytes} cache bytes "
         f"({row['paged_engine']['shared_blocks']} prefix-shared blocks)")
+    return row
+
+
+def _train_briefly(params, cfg, *, steps: int, period: int, depth: int,
+                   lr: float = 2e-3, seed: int = 0, log=print):
+    """A few hundred Adam steps on periodic synthetic sequences.  The
+    point is an HONEST speculative-decode benchmark: the MTP head only
+    accelerates decode if it actually predicts, and a freshly-initialized
+    head accepts ~nothing.  The base loss only supervises MTP depth 1;
+    speculative decode CHAINS the head ``depth`` times, so train with
+    ``mtp_chain_loss`` too — otherwise acceptance collapses past the
+    first draft (out-of-distribution hidden feedback)."""
+    B, S = 8, 33
+
+    def batch_for(key):
+        start = jax.random.randint(key, (B, 1), 0, period)
+        toks = (start + jnp.arange(S)[None, :]) % period
+        return {"tokens": toks[:, :-1].astype(jnp.int32),
+                "labels": toks[:, 1:].astype(jnp.int32)}
+
+    def full_loss(params, batch):
+        loss, aux = M.loss_fn(params, cfg, batch)
+        return loss + cfg.mtp_loss_weight * M.mtp_chain_loss(
+            params, cfg, batch, depth=depth), aux
+
+    @jax.jit
+    def step(params, m, v, i, key):
+        (loss, _), g = jax.value_and_grad(full_loss, has_aux=True)(
+            params, batch_for(key))
+        m = jax.tree.map(lambda a, b: 0.9 * a + 0.1 * b, m, g)
+        v = jax.tree.map(lambda a, b: 0.99 * a + 0.01 * b * b, v, g)
+        t = i + 1.0
+        params = jax.tree.map(
+            lambda p, a, b: p - lr * (a / (1 - 0.9 ** t))
+            / (jnp.sqrt(b / (1 - 0.99 ** t)) + 1e-8), params, m, v)
+        return params, m, v, loss
+
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+    loss = None
+    for i, key in enumerate(jax.random.split(jax.random.PRNGKey(seed), steps)):
+        params, m, v, loss = step(params, m, v, float(i), key)
+    log(f"  trained {steps} steps on period-{period} data "
+        f"(final loss {float(loss):.3f})")
+    return params
+
+
+def _periodic_traffic(cfg, n: int, seed: int, *, period: int, gen_lens):
+    """Prompts drawn from the same periodic process the model was
+    trained on, so greedy decode (and the MTP drafts) continue the
+    pattern instead of wandering through untrained token space."""
+    rng = np.random.default_rng(seed)
+    batches, lengths = [], []
+    for _ in range(n):
+        p = int(rng.choice(PROMPT_LENS))
+        start = int(rng.integers(0, period))
+        toks = (start + np.arange(p)) % period
+        batches.append({"tokens": jnp.asarray(toks[None, :], jnp.int32)})
+        lengths.append((p, int(rng.choice(gen_lens))))
+    gaps = rng.exponential(MEAN_GAP_S, size=n)
+    arrivals = np.cumsum(gaps) - gaps[0]
+    return batches, lengths, arrivals
+
+
+def serving_speculative_bench(n_requests: int = 12, *, n_slots: int = 4,
+                              seg_len: int = 6, n_draft: int = 3,
+                              seed: int = 0, arch: str = "deepseek-v3-671b",
+                              train_steps: int = 400, period: int = 16,
+                              repeats: int = 5, log=print):
+    """Self-speculative MTP decode vs plain continuous batching on the
+    SAME traffic: the MTP head drafts ``n_draft`` tokens per compiled
+    step and the backbone verifies them in one C = n_draft+1 chunk, so a
+    step that accepts everything advances 4 tokens for ~one step's
+    latency.  The model is briefly trained on periodic data first —
+    speculative throughput is meaningless at random init (acceptance
+    ~0).  Both engines share every knob (seg_len=6: long enough to
+    amortize host work per segment, short enough that a speculative
+    segment — up to seg_len*(n_draft+1) emissions per slot — doesn't
+    overshoot a finished request into dead steps).  Asserts identical
+    greedy outputs and appends the row to BENCH_serve.json under
+    "speculative"."""
+    # 4 backbone layers, not the reduced default of 2: the draft head is
+    # ONE layer chained n_draft times, so at 2 layers drafting costs 1.5
+    # backbones and the step economics misrepresent real models (tens of
+    # layers per single-layer MTP head).  4 layers already puts the
+    # verify step at ~1.2x a plain step.
+    cfg = get_config(arch, variant="reduced").replace(vocab_size=256,
+                                                      n_layers=4)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    params = _train_briefly(params, cfg, steps=train_steps, period=period,
+                            depth=n_draft, seed=seed, log=log)
+    # much longer generations than the base bench: prefill and host
+    # overhead are identical across the two engines, so short gens dilute
+    # the decode speedup the row is meant to gate
+    gen_lens = (48, 64, 96)
+    batches, lengths, arrivals = _periodic_traffic(
+        cfg, n_requests, seed, period=period, gen_lens=gen_lens)
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in lengths)
+    total_tokens = sum(g for _, g in lengths)
+
+    engines = {
+        "continuous": ServeEngine(params, cfg, n_slots=n_slots,
+                                  max_len=max_len, seg_len=seg_len),
+        "speculative": ServeEngine(params, cfg, n_slots=n_slots,
+                                   max_len=max_len, seg_len=seg_len,
+                                   speculate=n_draft),
+    }
+    results, outputs = {}, {}
+    for name, eng in engines.items():
+        fn = functools.partial(_serve_engine_mode, engine=eng)
+        wall, outs, extra = _timed_replays(
+            fn, params, cfg, batches, lengths, arrivals, max_len,
+            total_tokens, name, repeats)
+        n_tok = sum(len(v) for v in outs.values())
+        results[name] = {"wall_s": round(wall, 4),
+                         "tok_s": round(n_tok / wall, 2),
+                         "tokens": n_tok, **extra}
+        outputs[name] = outs
+        log(f"  {name}: {n_tok} tok in {wall:.3f}s "
+            f"({results[name]['tok_s']} tok/s)")
+    # greedy: acceptance is exact argmax prefix matching, so speculative
+    # decode must be a pure latency optimization — identical tokens
+    match = outputs["speculative"] == outputs["continuous"]
+    assert match, "speculative decode diverged from plain decode"
+    acc = engines["speculative"].spec_acceptance()
+    speedup = round(results["speculative"]["tok_s"]
+                    / results["continuous"]["tok_s"], 2)
+
+    row = {
+        "arch": cfg.name,
+        "n_draft": n_draft,
+        "traffic": {"n_requests": n_requests, "prompt_lens": PROMPT_LENS,
+                    "gen_lens": gen_lens, "seed": seed,
+                    "total_tokens": total_tokens,
+                    "train_steps": train_steps, "period": period},
+        "engine": {"n_slots": n_slots, "seg_len": seg_len,
+                   "max_len": max_len},
+        "modes": results,
+        "acceptance_rate": round(acc, 3),
+        "speedup_spec_vs_cb": speedup,
+        "outputs_match_unspeculated": match,
+    }
+    path = _bench_path()
+    payload = {}
+    if os.path.exists(path):
+        with open(path) as f:
+            payload = json.load(f)
+    payload["speculative"] = row
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    log(f"  speculative: {speedup}x vs continuous batching "
+        f"(acceptance {acc:.1%}, outputs match: {match})")
     return row
 
 

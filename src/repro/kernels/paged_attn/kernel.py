@@ -1,22 +1,28 @@
 """Paged decode attention for TPU (Pallas, scalar-prefetched block table).
 
-One query token per slot attends over a block-paged KV pool without ever
-gathering a contiguous per-slot cache in HBM: the per-slot block table
-is a **scalar-prefetch** operand, so the k/v BlockSpec index maps read
-``bt[b, j]`` and DMA exactly the pool rows the slot owns.
+A C-token query chunk per slot attends over a block-paged KV pool
+without ever gathering a contiguous per-slot cache in HBM: the per-slot
+block table is a **scalar-prefetch** operand, so the k/v BlockSpec index
+maps read ``bt[b, j]`` and DMA exactly the pool rows the slot owns.
+C=1 is the classic decode step; C>1 serves chunked prefill and the
+speculative-decode verify chunk (queries occupy the CONTIGUOUS positions
+``pos[b] .. pos[b] + C - 1`` — ``pos`` is the FIRST query's position).
 
 Grid: (B, KH, nbt) — the innermost (table-entry) dimension is sequential
 on TPU, so the online-softmax accumulators persist in VMEM scratch
 across j-steps, exactly like the flash kernel's k-dimension.
 
 BlockSpec tiling (all VMEM):
-  q    : (1, 1, G, Dq)   indexed (b, h)          — G = H // KH query heads
-  k,v  : (1, bl, 1, D*)  indexed (bt[b, j], h)   — the paged indirection
-  out  : (1, 1, G, Dv)   indexed (b, h)
+  q    : (1, 1, C, G, Dq) indexed (b, h)          — G = H // KH query heads
+  k,v  : (1, bl, 1, D*)   indexed (bt[b, j], h)   — the paged indirection
+  out  : (1, 1, C, G, Dv) indexed (b, h)
 
-Blocks whose first row lies beyond ``pos[b]`` (or entirely left of the
-sliding window) are skipped with ``pl.when`` — a slot only pays for the
-blocks it has actually filled, which is the whole point of paging.
+Blocks whose first row lies beyond the LAST query's position (or
+entirely left of the sliding window) are skipped with ``pl.when`` — a
+slot only pays for the blocks it has actually filled, which is the whole
+point of paging.  Within a visible block, per-query causal/window masks
+zero the probability mass directly (a block can be visible to the chunk
+but fully masked for an individual query row).
 """
 from __future__ import annotations
 
@@ -32,7 +38,7 @@ NEG_INF = -1.0e30
 
 def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
                   m_scr, l_scr, acc_scr, *, scale: float, window: int,
-                  softcap: float, block_len: int):
+                  softcap: float, block_len: int, n_q: int):
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -43,74 +49,85 @@ def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         l_scr[...] = jnp.zeros_like(l_scr)
         acc_scr[...] = jnp.zeros_like(acc_scr)
 
-    p_b = pos_ref[b]
+    p0 = pos_ref[b]
     base = j * block_len
-    visible = base <= p_b  # block holds at least one in-range position
+    # block holds at least one position in range of SOME query
+    visible = base <= p0 + n_q - 1
     if window:
-        visible = visible & (base + block_len - 1 > p_b - window)
+        visible = visible & (base + block_len - 1 > p0 - window)
 
     @pl.when(visible)
     def _compute():
-        q = q_ref[0, 0].astype(jnp.float32)        # (G, Dq)
+        C, G = m_scr.shape
+        q = q_ref[0, 0].astype(jnp.float32)        # (C, G, Dq)
         k = k_ref[0, :, 0].astype(jnp.float32)     # (bl, Dq)
         v = v_ref[0, :, 0].astype(jnp.float32)     # (bl, Dv)
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ()))) * scale
+        s = jax.lax.dot_general(
+            q.reshape(C * G, -1), k, (((1,), (1,)), ((), ()))
+        ).reshape(C, G, block_len) * scale
         if softcap:
             s = jnp.tanh(s / softcap) * softcap
-        kpos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        ok = kpos <= p_b
+        kpos = base + jax.lax.broadcasted_iota(jnp.int32, s.shape, 2)
+        qpos = p0 + jax.lax.broadcasted_iota(jnp.int32, s.shape, 0)
+        ok = kpos <= qpos
         if window:
-            ok = ok & (kpos > p_b - window)
+            ok = ok & (kpos > qpos - window)
         s = jnp.where(ok, s, NEG_INF)
 
         m_prev = m_scr[...]
         m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
-        p = jnp.exp(s - m_new[:, None])
+        # mask the probabilities, not just the scores: a query row with
+        # no visible position yet has m_new == NEG_INF, and
+        # exp(NEG_INF - NEG_INF) would be 1, not 0
+        p = jnp.where(ok, jnp.exp(s - m_new[..., None]), 0.0)
         corr = jnp.exp(m_prev - m_new)
         l_scr[...] = l_scr[...] * corr + jnp.sum(p, axis=-1)
-        acc_scr[...] = acc_scr[...] * corr[:, None] + jax.lax.dot_general(
-            p, v, (((1,), (0,)), ((), ())))
+        acc_scr[...] = acc_scr[...] * corr[..., None] + jax.lax.dot_general(
+            p.reshape(C * G, block_len), v, (((1,), (0,)), ((), ()))
+        ).reshape(C, G, -1)
         m_scr[...] = m_new
 
     @pl.when(j == nj - 1)
     def _finalize():
         denom = jnp.maximum(l_scr[...], 1e-30)
-        o_ref[0, 0] = (acc_scr[...] / denom[:, None]).astype(o_ref.dtype)
+        o_ref[0, 0] = (acc_scr[...] / denom[..., None]).astype(o_ref.dtype)
 
 
 def paged_attention_bhgd(q, k_pool, v_pool, block_table, pos, *,
                          scale: float, window: int, softcap: float,
                          interpret: bool = False):
-    """q: (B, KH, G, Dq); pools: (n_blocks, bl, KH, D*);
-    block_table: (B, nbt) int32; pos: (B,) int32 -> (B, KH, G, Dv)."""
-    B, KH, G, Dq = q.shape
+    """q: (B, KH, C, G, Dq); pools: (n_blocks, bl, KH, D*);
+    block_table: (B, nbt) int32; pos: (B,) int32 position of the FIRST
+    query (queries sit at pos .. pos + C - 1) -> (B, KH, C, G, Dv)."""
+    B, KH, C, G, Dq = q.shape
     bl = k_pool.shape[1]
     Dv = v_pool.shape[-1]
     nbt = block_table.shape[1]
 
     kern = functools.partial(_paged_kernel, scale=scale, window=window,
-                             softcap=softcap, block_len=bl)
+                             softcap=softcap, block_len=bl, n_q=C)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KH, nbt),
         in_specs=[
-            pl.BlockSpec((1, 1, G, Dq), lambda b, h, j, bt, pos: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, C, G, Dq),
+                         lambda b, h, j, bt, pos: (b, h, 0, 0, 0)),
             pl.BlockSpec((1, bl, 1, Dq),
                          lambda b, h, j, bt, pos: (bt[b, j], 0, h, 0)),
             pl.BlockSpec((1, bl, 1, Dv),
                          lambda b, h, j, bt, pos: (bt[b, j], 0, h, 0)),
         ],
-        out_specs=pl.BlockSpec((1, 1, G, Dv),
-                               lambda b, h, j, bt, pos: (b, h, 0, 0)),
+        out_specs=pl.BlockSpec((1, 1, C, G, Dv),
+                               lambda b, h, j, bt, pos: (b, h, 0, 0, 0)),
         scratch_shapes=[
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G,), jnp.float32),
-            pltpu.VMEM((G, Dv), jnp.float32),
+            pltpu.VMEM((C, G), jnp.float32),
+            pltpu.VMEM((C, G), jnp.float32),
+            pltpu.VMEM((C, G, Dv), jnp.float32),
         ],
     )
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KH, G, Dv), v_pool.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, KH, C, G, Dv), v_pool.dtype),
         interpret=interpret,
     )(block_table.astype(jnp.int32), pos.astype(jnp.int32), q, k_pool, v_pool)

@@ -2,10 +2,12 @@
 
 Decode-only (no VJP): the paged pool is serving state, never trained
 through.  ``layers.attention_decode`` selects this op under
-``cfg.use_pallas`` after inserting the step's k/v into the pool; the
+``cfg.use_pallas`` after inserting the chunk's k/v into the pool; the
 engine guarantees every table entry is a valid pool row (trash block 0
 for unallocated tail entries), so the kernel needs no bounds handling
-beyond the ``pos`` mask.
+beyond the ``pos`` mask.  C=1 is the decode step; C>1 serves chunked
+prefill and the speculative verify chunk — queries must occupy the
+contiguous positions ``pos .. pos + C - 1``.
 """
 from __future__ import annotations
 
@@ -28,23 +30,25 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, pos, *,
                            window: int = 0, softcap: float = 0.0,
                            scale: float | None = None,
                            interpret: bool | None = None):
-    """q: (B, 1, H, Dq); pools: (n_blocks, block_len, KH, D*);
-    block_table: (B, nbt); pos: (B,) -> (B, 1, H, Dv).
+    """q: (B, C, H, Dq); pools: (n_blocks, block_len, KH, D*);
+    block_table: (B, nbt); pos: (B,) position of the FIRST query
+    (queries are consecutive) -> (B, C, H, Dv).
 
     GQA stays grouped: each (slot, kv-head) grid cell attends its
-    H // KH query heads against one DMA of the head's pool rows.
+    H // KH query heads (for all C chunk positions) against one DMA of
+    the head's pool rows.
     """
     if interpret is None:
         interpret = _on_cpu()
-    B, _, H, Dq = q.shape
+    B, C, H, Dq = q.shape
     KH = k_pool.shape[2]
     G = H // KH
     if scale is None:
         scale = 1.0 / math.sqrt(Dq)
-    qr = q.reshape(B, 1, KH, G, Dq)[:, 0]  # (B, KH, G, Dq)
+    qr = q.reshape(B, C, KH, G, Dq).transpose(0, 2, 1, 3, 4)  # (B,KH,C,G,Dq)
     out = paged_attention_bhgd(qr, k_pool, v_pool,
                                jnp.asarray(block_table, jnp.int32),
                                jnp.asarray(pos, jnp.int32), scale=scale,
                                window=window, softcap=softcap,
                                interpret=interpret)
-    return out.reshape(B, 1, H, v_pool.shape[-1])
+    return out.transpose(0, 2, 1, 3, 4).reshape(B, C, H, v_pool.shape[-1])

@@ -5,7 +5,9 @@ logical position ``j`` of slot ``b`` lives in pool row
 ``block_table[b, j // block_len]`` at offset ``j % block_len``, so the
 gathered-and-flattened view indexes by logical position directly.
 Table entries past a slot's allocated blocks point at the trash block 0;
-their rows sit above ``pos`` and are masked.
+their rows sit above the query positions and are masked.  ``pos`` is the
+FIRST query's position; the C chunk queries sit at ``pos .. pos+C-1``
+with per-query causal/window masks (in-chunk causality).
 """
 from __future__ import annotations
 
@@ -19,9 +21,9 @@ NEG_INF = -1.0e30
 
 def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *,
                         window: int = 0, softcap: float = 0.0, scale=None):
-    """q: (B, 1, H, Dq); pools: (n_blocks, block_len, KH, D*);
-    block_table: (B, nbt) int32; pos: (B,) int32 -> (B, 1, H, Dv)."""
-    B, _, H, Dq = q.shape
+    """q: (B, C, H, Dq); pools: (n_blocks, block_len, KH, D*);
+    block_table: (B, nbt) int32; pos: (B,) int32 -> (B, C, H, Dv)."""
+    B, C, H, Dq = q.shape
     KH = k_pool.shape[2]
     G = H // KH
     if scale is None:
@@ -29,16 +31,17 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *,
     kg = k_pool[block_table].reshape((B, -1) + k_pool.shape[2:])
     vg = v_pool[block_table].reshape((B, -1) + v_pool.shape[2:])
     S = kg.shape[1]
-    qr = q.reshape(B, 1, KH, G, Dq)
+    qr = q.reshape(B, C, KH, G, Dq)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32),
                    kg.astype(jnp.float32)) * scale
     if softcap:
         s = jnp.tanh(s / softcap) * softcap
-    kpos = jnp.arange(S)[None, :]
-    ok = kpos <= pos[:, None]
+    kpos = jnp.arange(S)[None, None, :]                     # (1, 1, S)
+    qpos = pos[:, None, None] + jnp.arange(C)[None, :, None]  # (B, C, 1)
+    ok = kpos <= qpos
     if window:
-        ok = ok & (kpos > pos[:, None] - window)
-    s = jnp.where(ok[:, None, None, None], s, NEG_INF)
+        ok = ok & (kpos > qpos - window)
+    s = jnp.where(ok[:, None, None], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", w, vg.astype(jnp.float32))
-    return o.reshape(B, 1, H, vg.shape[-1]).astype(v_pool.dtype)
+    return o.reshape(B, C, H, vg.shape[-1]).astype(v_pool.dtype)

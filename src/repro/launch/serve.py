@@ -98,6 +98,15 @@ def main():
     ap.add_argument("--check-unsharded", action="store_true",
                     help="replay the same traffic single-device (mesh=None, "
                          "overlap off) and fail unless completions match")
+    ap.add_argument("--speculate", action="store_true",
+                    help="self-speculative MTP decode: draft + verify "
+                         "n-draft tokens inside each compiled scan step "
+                         "(needs an arch with an MTP head, cfg.n_mtp > 0)")
+    ap.add_argument("--n-draft", type=int, default=3,
+                    help="speculative decode: draft tokens per step")
+    ap.add_argument("--check-unspeculated", action="store_true",
+                    help="replay the same traffic without speculation and "
+                         "fail unless completions match")
     args = ap.parse_args()
     if args.buckets and not args.bucket:
         ap.error("--buckets requires --bucket")
@@ -105,6 +114,8 @@ def main():
         ap.error("--check-unbucketed requires --bucket")
     if args.check_unsharded and not args.sharded:
         ap.error("--check-unsharded requires --sharded")
+    if args.check_unspeculated and not args.speculate:
+        ap.error("--check-unspeculated requires --speculate")
 
     cfg = get_config(args.arch, variant=args.variant)
     if args.variant == "reduced":
@@ -128,6 +139,8 @@ def main():
         bucket_kw["chunk_len"] = args.chunk_len
         if args.buckets:
             bucket_kw["buckets"] = [int(b) for b in args.buckets.split(",")]
+    if args.speculate:
+        bucket_kw["speculate"] = args.n_draft  # rides every engine below
     with mesh:
         if args.paged:
             engine = PagedServeEngine(
@@ -169,6 +182,11 @@ def main():
               f"overlap_a2a={cfg.overlap_a2a}")
     first = comps[min(comps)]
     print("sample:", first.tokens[:16])
+    if args.speculate:
+        print(f"speculative: n_draft={args.n_draft} "
+              f"acceptance={engine.spec_acceptance():.1%} "
+              f"({engine.stats['spec_extra_tokens']} extra tokens over "
+              f"{engine.stats['spec_steps']} live steps)")
     if args.check_unbucketed:
         with mesh:
             ref = ServeEngine(params, cfg, n_slots=args.slots,
@@ -208,6 +226,36 @@ def main():
                 f"sharded completions diverged from single-device: "
                 f"{got} != {want}")
         print("check-unsharded: completions match")
+    if args.check_unspeculated:
+        plain_kw = {k: v for k, v in bucket_kw.items() if k != "speculate"}
+        with mesh:
+            if args.paged:
+                ref = PagedServeEngine(
+                    params, cfg, n_slots=args.slots, max_len=max_len,
+                    sampler=pick_sampler(args), seg_len=args.seg_len,
+                    mesh=mesh, block_len=args.block_len,
+                    n_blocks=args.blocks or None,
+                    lazy=not args.eager_blocks, **plain_kw)
+            else:
+                ref = ServeEngine(params, cfg, n_slots=args.slots,
+                                  max_len=max_len,
+                                  sampler=pick_sampler(args),
+                                  seg_len=args.seg_len, mesh=mesh,
+                                  **plain_kw)
+            for b, (_, g) in zip(batches, lengths):
+                ref.submit(b, max_new=g)
+            t0 = time.time()
+            ref_comps = ref.run()
+            ref_dt = time.time() - t0
+        got = {u: c.tokens.tolist() for u, c in comps.items()}
+        want = {u: c.tokens.tolist() for u, c in ref_comps.items()}
+        if got != want:
+            raise SystemExit(
+                f"speculative completions diverged from plain decode: "
+                f"{got} != {want}")
+        print(f"check-unspeculated: completions match "
+              f"({engine.stats['segments']} speculative segments vs "
+              f"{ref.stats['segments']} plain, replay {ref_dt:.2f}s)")
 
 
 if __name__ == "__main__":

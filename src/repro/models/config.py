@@ -73,6 +73,8 @@ class ModelConfig:
 
     # ---- multi-token prediction (DeepSeek-V3) ----------------------------
     n_mtp: int = 0
+    # weight of the auxiliary MTP loss in the training objective
+    mtp_loss_weight: float = 0.3
 
     # ---- SSM (Mamba-2 / SSD) ---------------------------------------------
     ssm_state: int = 0         # 0 = no ssm
@@ -206,7 +208,7 @@ def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
     if cfg.frontend:
         kw.update(frontend_tokens=min(cfg.frontend_tokens, 16) or 16)
     if cfg.n_mtp:
-        kw.update(n_mtp=1)
+        kw.update(n_mtp=1, mtp_loss_weight=cfg.mtp_loss_weight)
     if cfg.sliding_window:
         kw.update(sliding_window=64)
     kw.update(overrides)

@@ -355,21 +355,22 @@ _PAGED_PATH_LOGGED: set = set()
 
 def paged_read_path(cfg: ModelConfig, C: int, attn: str = "gqa") -> str:
     """Which paged-attention read path serves this call: ``"pallas"``
-    (the scalar-prefetched single-query kernel) or ``"gather"`` (the
+    (the scalar-prefetched block-table kernel) or ``"gather"`` (the
     block-table gather reference).
 
     The fallback selection is explicit — and logged once per distinct
     reason — so sharded benches can report which path actually ran: the
-    Pallas kernel is single-query (C>1 chunked-prefill chunks read
-    through the gather) and GQA-layout only (MLA's latent cache attends
-    through the absorbed-matrix gather path).
+    Pallas kernel covers GQA at any chunk width (C=1 decode, C>1
+    chunked-prefill and speculative-verify chunks — the former gather
+    fallback for C>1 is retired), while MLA's latent cache attends
+    through the absorbed-matrix gather path.
     """
     if attn == "mla":
         path, why = "gather", "MLA latent layout"
     elif not cfg.use_pallas:
         path, why = "gather", "use_pallas=False"
     elif C != 1:
-        path, why = "gather", f"chunked prefill (C={C})"
+        path, why = "pallas", f"multi-query chunk (C={C})"
     else:
         path, why = "pallas", "single-query decode"
     if (path, why) not in _PAGED_PATH_LOGGED:
@@ -410,11 +411,14 @@ def attention_decode(p, cfg: ModelConfig, x, pos, k_cache, v_cache, *,
         k_cache = paged_insert(k_cache, wt, pos, k)
         v_cache = paged_insert(v_cache, wt, pos, v)
         if paged_read_path(cfg, C) == "pallas":
+            # chunk positions are consecutive per slot (decode, chunked
+            # prefill, and the speculative verify chunk all are), so the
+            # kernel takes the first query's position and derives the rest
             from repro.kernels.paged_attn import ops as pa_ops
             out = pa_ops.paged_decode_attention(
                 q, k_cache, v_cache, block_table, pos[:, 0], window=window,
                 softcap=cfg.attn_logit_softcap)
-            return out.reshape(B, 1, -1) @ p["wo"], (k_cache, v_cache)
+            return out.reshape(B, C, -1) @ p["wo"], (k_cache, v_cache)
         kg = paged_gather(k_cache, block_table)
         vg = paged_gather(v_cache, block_table)
     Smax = kg.shape[1]

@@ -614,7 +614,7 @@ def loss_fn(params, cfg: ModelConfig, batch, *, mesh=None):
     if cfg.n_mtp and "mtp" in params:
         mtp_loss = _mtp_loss(params, cfg, h, batch)
         metrics["mtp_loss"] = mtp_loss
-        loss = loss + 0.3 * mtp_loss
+        loss = loss + cfg.mtp_loss_weight * mtp_loss
     return loss + aux, metrics
 
 
@@ -636,15 +636,59 @@ def _mtp_loss(params, cfg: ModelConfig, h, batch):
     return nll / jnp.maximum(tok, 1.0)
 
 
+def mtp_chain_loss(params, cfg: ModelConfig, batch, *, depth: int,
+                   mesh=None):
+    """Teacher-forced CHAINED MTP loss: supervise the draft head at every
+    chain depth ``1..depth``, feeding its own output hidden back in —
+    exactly how ``_mtp_draft`` chains at inference.  ``_mtp_loss`` only
+    trains depth 1 from backbone hiddens, so a head trained with it
+    alone degrades sharply past the first speculative draft; train with
+    this when serving with ``speculate > 1``.  Tokens are teacher-forced
+    (ground truth at every depth) — on sequences the drafter gets right
+    this matches the on-policy inference distribution.
+
+    Depth j at position i combines the depth j-1 hidden with the
+    embedding of token i+j and predicts token i+j+1; the last j+1
+    positions roll around and are masked out.  Returns the mean NLL
+    averaged over depths (depth 1 reproduces ``_mtp_loss`` exactly).
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    B, S = tokens.shape
+    mp = params["mtp"]
+    h, _, _, _ = backbone(params, cfg, batch, mesh=mesh)
+    positions = jnp.arange(S)[None].repeat(B, 0)
+    total = jnp.zeros((), jnp.float32)
+    for j in range(1, depth + 1):
+        emb = _embed(params, cfg, jnp.roll(tokens, -j, axis=1))
+        hin = jnp.concatenate([layers.apply_norm(mp["norm"], h),
+                               emb.astype(h.dtype)], axis=-1) @ mp["proj"]
+        h, _, _ = _block_full(mp["block"], cfg, hin, positions, kind="full",
+                              mesh=mesh)
+        lab = jnp.roll(labels, -j, axis=1)
+        mask = jnp.ones_like(lab, jnp.float32).at[:, -(j + 1):].set(0.0)
+        nll, tok, _ = chunked_ce(params, cfg, h, lab, mask)
+        total = total + nll / jnp.maximum(tok, 1.0)
+    return total / depth
+
+
 # ---------------------------------------------------------------------------
 # serving: prefill + decode
 # ---------------------------------------------------------------------------
 
-def prefill(params, cfg: ModelConfig, batch, *, mesh=None):
-    """Runs the full prompt, returns (last_token_logits, cache)."""
+def prefill(params, cfg: ModelConfig, batch, *, mesh=None,
+            return_hidden=False):
+    """Runs the full prompt, returns (last_token_logits, cache).
+
+    ``return_hidden`` packs the last position's pre-head hidden next to
+    the logits — ``((logits, h_last), cache)`` — so a speculative
+    engine can seed its first draft chain hot instead of burning the
+    admission step's drafts on a zero hidden.
+    """
     h, _, caches, _ = backbone(params, cfg, batch, mesh=mesh,
                                collect_cache=True)
     logits = _head(params, cfg, h[:, -1:])[:, 0]
+    if return_hidden:
+        return (logits, h[:, -1]), caches
     return logits, caches
 
 
@@ -1287,6 +1331,85 @@ def greedy_sample(keys, logits):
     return jnp.argmax(logits, -1).astype(jnp.int32)
 
 
+def greedy_verify(keys, logits, draft):
+    """Verify twin of ``greedy_sample``: emit the argmax of the TARGET
+    logits at a drafted position; the draft is accepted iff it matches,
+    so the emitted stream is exactly the greedy stream."""
+    del keys
+    tgt = jnp.argmax(logits, -1).astype(jnp.int32)
+    return tgt, tgt == draft
+
+
+def _verify_for(sampler):
+    v = getattr(sampler, "verify", None)
+    if v is not None:
+        return v
+    if sampler is greedy_sample:
+        return greedy_verify
+    raise ValueError(
+        "speculative decode needs a sampler with a verify() method "
+        "(see repro.serve.sampling)")
+
+
+def _mtp_draft(params, cfg: ModelConfig, h, tok, pos, *, mesh=None):
+    """One inference-time MTP draft: combine the final-normed hidden
+    ``h`` (B, D) of the position that emitted ``tok`` (B,) with the
+    embedding of ``tok`` — the exact training-time ``_mtp_loss``
+    combination — and run the depth-1 MTP block at a single position.
+
+    Returns (draft logits (B, V), hidden for chaining the next draft).
+    The draft head reuses the LM head WITHOUT ``final_norm``, matching
+    how training feeds the block output straight into ``chunked_ce``.
+    """
+    mp = params["mtp"]
+    emb = _embed(params, cfg, tok[:, None])
+    hin = jnp.concatenate([layers.apply_norm(mp["norm"], h[:, None]),
+                           emb.astype(h.dtype)], axis=-1) @ mp["proj"]
+    hout, _, _ = _block_full(mp["block"], cfg, hin, pos[:, None], kind="full",
+                             mesh=mesh)
+    return _head(params, cfg, hout)[:, 0], hout[:, 0]
+
+
+def _spec_zero_rejected(cfg: ModelConfig, cache, pos, a, *, k: int,
+                        block_tables=None):
+    """Scrub the KV written for rejected draft positions.
+
+    The verify chunk writes all ``k+1`` positions before acceptance is
+    known; per slot, positions ``pos + a .. pos + k`` hold rejected
+    drafts (``a`` = accepted length; done rows pass a=0 so every write
+    is scrubbed).  Contiguous caches zero them in place — bit-identical
+    to the never-written state token-by-token decode leaves behind —
+    with KEPT positions diverted out of bounds (scatters drop OOB).
+    Paged caches zero through the block tables with kept positions
+    diverted to the trash block row 0 (table gathers clamp, and table
+    columns past the allocation already point at trash).
+    """
+    B = pos.shape[0]
+    jj = jnp.arange(k + 1)
+    rej = jj[None, :] >= a[:, None]                      # (B, k+1)
+    tgt = pos[:, None] + jj[None, :]                     # (B, k+1)
+    bat = decode_cache_batch_axes(cfg)
+    seq = decode_cache_seq_axes(cfg)
+    bidx = jnp.arange(B)[:, None]
+
+    def zero_leaf(leaf, bax, sax):
+        if sax < 0:
+            return leaf
+        sax2 = sax if sax > bax else sax + 1
+        l = jnp.moveaxis(jnp.moveaxis(leaf, bax, 0), sax2, 1)
+        if block_tables is None:
+            p = jnp.where(rej, tgt, l.shape[1])          # kept -> OOB drop
+            l = l.at[bidx, p].set(0)
+        else:
+            bl = l.shape[1]
+            blk = block_tables[bidx, tgt // bl]
+            blk = jnp.where(rej, blk, 0)                 # kept -> trash row
+            l = l.at[blk, tgt % bl].set(0)
+        return jnp.moveaxis(jnp.moveaxis(l, 1, sax2), 0, bax)
+
+    return jax.tree.map(zero_leaf, cache, bat, seq)
+
+
 def _scan_generate(params, cfg: ModelConfig, cache, tok, pos, rem, done,
                    keys, eos, *, steps, sampler, return_logits, mesh,
                    block_tables=None):
@@ -1318,6 +1441,125 @@ def _scan_generate(params, cfg: ModelConfig, cache, tok, pos, rem, done,
     if return_logits:
         res["logits"] = jnp.moveaxis(ys[2], 0, 1)
     return res
+
+
+def _scan_generate_spec(params, cfg: ModelConfig, cache, tok, pos, rem, done,
+                        keys, h, eos, *, steps, k, sampler, mesh,
+                        block_tables=None):
+    """Self-speculative scanned decode: each step drafts ``k`` tokens
+    with the model's own MTP head, verifies all ``k+1`` positions in ONE
+    C=(k+1) pass through the shared ``_chunk_hidden`` decode body, and
+    advances each slot by its accepted length (>= 1 emission per live
+    step, <= k+1).
+
+    Greedy acceptance is an exact argmax-prefix match, so the emitted
+    stream is bit-identical to token-by-token decode; stochastic
+    samplers use residual rejection sampling (``sampler.verify``) whose
+    emitted marginal equals the target distribution.  The carry gains
+    ``h`` (B, D): the final-normed hidden of the position that emitted
+    the pending token, seeding the next step's draft chain.  Rejected
+    draft writes are scrubbed after acceptance so slot cache state
+    matches token-by-token decode exactly.
+    """
+    verify = _verify_for(sampler)
+    B = tok.shape[0]
+    C = k + 1
+
+    def body(carry, _):
+        tok, pos, rem, done, keys, h, cache = carry
+        live = ~done
+        ks = jax.vmap(lambda kk: jax.random.split(kk, C + 1))(keys)
+
+        # ---- draft: chain the depth-1 MTP head greedily, k times ----
+        drafts = []
+        dh, dt = h, tok
+        for j in range(k):
+            dlogits, dh = _mtp_draft(params, cfg, dh, dt,
+                                     jnp.maximum(pos - 1 + j, 0), mesh=mesh)
+            dt = jnp.argmax(dlogits, -1).astype(jnp.int32)
+            drafts.append(dt)
+
+        # ---- verify: one C=k+1 forward through the decode body ----
+        chunk = jnp.stack([tok] + drafts, axis=1)         # (B, C)
+        cpos = pos[:, None] + jnp.arange(C)[None, :]
+        x = _embed(params, cfg, chunk)
+        lv = jnp.broadcast_to(live[:, None], (B, C))
+        hc, cache = _chunk_hidden(params, cfg, cache, x, cpos, mesh=mesh,
+                                  block_tables=block_tables, live=lv)
+        logits = _head(params, cfg, hc)                   # (B, C, V)
+
+        # ---- accept: emission chain with in-chunk eos/budget stops ----
+        # position j's logits verify draft j+1 (j < k) or sample the
+        # bonus token (j = k); a rejection emits the verifier's token
+        # and ends the chain, so every live step emits at least once.
+        emit = live
+        toks_out, valid_out = [], []
+        a = jnp.zeros((B,), jnp.int32)
+        new_tok, new_done = tok, done
+        for j in range(C):
+            if j < k:
+                tj, acc = verify(ks[:, j], logits[:, j], drafts[j])
+            else:
+                tj = sampler(ks[:, j], logits[:, j])
+                acc = jnp.zeros((B,), bool)
+            valid = emit
+            rem = rem - valid.astype(rem.dtype)
+            stop = valid & ((tj == eos) | (rem <= 0))
+            new_done = new_done | stop
+            new_tok = jnp.where(valid, tj, new_tok)
+            a = a + valid.astype(jnp.int32)
+            toks_out.append(tj)
+            valid_out.append(valid)
+            emit = emit & acc & ~stop
+        new_pos = jnp.where(live, pos + a, pos)
+        idx = jnp.clip(a - 1, 0, k)
+        new_h = jnp.take_along_axis(hc, idx[:, None, None], axis=1)[:, 0]
+        new_h = jnp.where(live[:, None], new_h, h)
+        # scrub everything past the accepted frontier.  Dead lanes
+        # (a = 0) keep chunk position 0: the plain scan re-writes the
+        # pending token's kv at the parked frontier every step, and
+        # position 0 of the verify chunk is that exact write, so keeping
+        # it preserves bit-identity of the whole cache
+        cache = _spec_zero_rejected(cfg, cache, pos, jnp.maximum(a, 1), k=k,
+                                    block_tables=block_tables)
+        out = (jnp.stack(toks_out, 1), jnp.stack(valid_out, 1))
+        return (new_tok, new_pos, rem, new_done, ks[:, C], new_h, cache), out
+
+    carry, ys = jax.lax.scan(body, (tok, pos, rem, done, keys, h, cache),
+                             None, length=steps)
+    tok, pos, rem, done, keys, h, cache = carry
+    return {"tokens": jnp.moveaxis(ys[0], 0, 1).reshape(B, steps * C),
+            "valid": jnp.moveaxis(ys[1], 0, 1).reshape(B, steps * C),
+            "next_tok": tok, "pos": pos, "remaining": rem, "done": done,
+            "rng": keys, "h_spec": h, "cache": cache}
+
+
+@functools.lru_cache(maxsize=32)
+def _generate_spec_fn(cfg: ModelConfig, steps: int, k: int, sampler, mesh):
+    """Compiled speculative scanned-decode body, cached per
+    (cfg, steps, k, sampler, mesh).  The cache operand is donated."""
+
+    def run(params, cache, tok, pos, rem, done, keys, h, eos):
+        return _scan_generate_spec(params, cfg, cache, tok, pos, rem, done,
+                                   keys, h, eos, steps=steps, k=k,
+                                   sampler=sampler, mesh=mesh)
+
+    return jax.jit(run, donate_argnums=(1,))
+
+
+@functools.lru_cache(maxsize=32)
+def _generate_spec_paged_fn(cfg: ModelConfig, steps: int, k: int, sampler,
+                            mesh):
+    """Paged twin of ``_generate_spec_fn``: block tables threaded into
+    every verify chunk (reads, writes, and the rejected-KV scrub)."""
+
+    def run(params, cache, bt, tok, pos, rem, done, keys, h, eos):
+        return _scan_generate_spec(params, cfg, cache, tok, pos, rem, done,
+                                   keys, h, eos, steps=steps, k=k,
+                                   sampler=sampler, mesh=mesh,
+                                   block_tables=bt)
+
+    return jax.jit(run, donate_argnums=(1,))
 
 
 @functools.lru_cache(maxsize=32)
@@ -1355,7 +1597,8 @@ def _generate_paged_fn(cfg: ModelConfig, steps: int, sampler,
 
 def generate(params, cfg: ModelConfig, cache, first_tok, pos0, *, steps: int,
              sampler=None, rng=None, eos_id=None, remaining=None, mesh=None,
-             return_logits: bool = False, block_tables=None):
+             return_logits: bool = False, block_tables=None,
+             speculate: int = 0, spec_h=None):
     """Run ``steps`` decode steps as ONE ``lax.scan`` dispatch.
 
     ``first_tok`` (B,) or (B, 1) is the token fed at ``pos0`` (B,) —
@@ -1374,6 +1617,16 @@ def generate(params, cfg: ModelConfig, cache, first_tok, pos0, *, steps: int,
     tables; the tables themselves are fixed for the whole segment (the
     engine allocates a request's blocks at admission).
 
+    With ``speculate=k`` (> 0) each scan step drafts ``k`` tokens via
+    the MTP head and verifies ``k+1`` positions in one C=(k+1) chunk —
+    per-slot advance becomes the accepted length, ``tokens``/``valid``
+    widen to (B, steps * (k+1)), the result gains the carried ``h_spec``
+    (pass it back as ``spec_h`` to continue a segmented decode;
+    admission starts from zeros — a cold first draft just gets
+    rejected), and the RNG stream differs from non-speculative decode
+    (k+2 splits per step).  Requires an MTP head (``cfg.n_mtp`` with
+    ``params["mtp"]`` — dense/moe/vlm families).
+
     Returns a dict with ``tokens``/``valid`` (B, steps), the carried
     ``next_tok``/``pos``/``remaining``/``done``/``rng``, the updated
     ``cache``, and (when ``return_logits``) the raw per-step ``logits``
@@ -1390,6 +1643,24 @@ def generate(params, cfg: ModelConfig, cache, first_tok, pos0, *, steps: int,
         remaining = jnp.full((B,), steps, jnp.int32)
     remaining = jnp.asarray(remaining).reshape(B).astype(jnp.int32)
     eos = jnp.int32(-1 if eos_id is None else eos_id)
+    if speculate:
+        if return_logits:
+            raise ValueError("return_logits is not supported with "
+                             "speculative decode")
+        if not (cfg.n_mtp and "mtp" in params):
+            raise ValueError(
+                "speculative decode needs an MTP head (cfg.n_mtp > 0 with "
+                "params['mtp'] — dense/moe/vlm families only)")
+        h = (jnp.zeros((B, cfg.d_model), _dtype(cfg)) if spec_h is None
+             else jnp.asarray(spec_h, _dtype(cfg)).reshape(B, cfg.d_model))
+        if block_tables is not None:
+            fn = _generate_spec_paged_fn(cfg, int(steps), int(speculate),
+                                         sampler, mesh)
+            return fn(params, cache, jnp.asarray(block_tables, jnp.int32),
+                      tok, pos0, remaining, remaining <= 0, rng, h, eos)
+        fn = _generate_spec_fn(cfg, int(steps), int(speculate), sampler, mesh)
+        return fn(params, cache, tok, pos0, remaining, remaining <= 0, rng,
+                  h, eos)
     if block_tables is not None:
         fn = _generate_paged_fn(cfg, int(steps), sampler, bool(return_logits),
                                 mesh)

@@ -170,13 +170,19 @@ class ServeEngine:
                  max_len: int = 128, sampler=None, eos_id: Optional[int] = None,
                  seg_len: int = 8, mesh=None, seed: int = 0,
                  history_limit: int = 4096, compile_cache_size: int = 32,
-                 chunk_len: Optional[int] = None, buckets=None):
+                 chunk_len: Optional[int] = None, buckets=None,
+                 speculate: int = 0):
         cfg.validate()
         if cfg.is_moe and not cfg.moe_dropless:
             # capacity drops are a training-time tradeoff; serving must
             # keep single-device semantics on any mesh, so expert
             # buffers are sized worst-case (no token ever dropped)
             cfg = cfg.replace(moe_dropless=True)
+        self.speculate = int(speculate)
+        if self.speculate and not (cfg.n_mtp and "mtp" in params):
+            raise ValueError(
+                "speculate requires an MTP head: cfg.n_mtp > 0 with "
+                "params['mtp'] (dense/moe/vlm families)")
         self.params, self.cfg = params, cfg
         self.n_slots, self.max_len, self.seg_len = n_slots, max_len, seg_len
         self.sampler = sampler if sampler is not None else Greedy()
@@ -201,6 +207,10 @@ class ServeEngine:
         self.tok = np.zeros((n_slots,), np.int32)
         self.pos = np.zeros((n_slots,), np.int32)
         self.rem = np.zeros((n_slots,), np.int32)
+        # speculative-decode draft seed: final-normed hidden of the
+        # position that emitted the slot's pending token.  Zeros at
+        # admission — a cold first draft simply gets rejected.
+        self.h_spec = np.zeros((n_slots, cfg.d_model), jnp.dtype(cfg.dtype))
         self.keys = np.array(jax.random.split(self._base_key, n_slots))
         self.slot_uid = np.full((n_slots,), -1, np.int64)
         self._slot_seq = np.zeros((n_slots,), np.int64)  # admission order
@@ -213,6 +223,7 @@ class ServeEngine:
         self.segment_idx = 0
         self.stats = {"generated_tokens": 0, "segments": 0, "prefills": 0,
                       "slot_steps": 0, "live_slot_steps": 0,
+                      "spec_steps": 0, "spec_extra_tokens": 0,
                       "peak_live_requests": 0}
         self._out: Dict[int, list] = {}
         self._plen: Dict[int, int] = {}
@@ -249,8 +260,9 @@ class ServeEngine:
                             self._cache_shardings)
 
     def _build_prefill(self, P: int):
-        cfg, mesh = self.cfg, self.mesh
-        return jax.jit(lambda p, b: M.prefill(p, cfg, b, mesh=mesh))
+        cfg, mesh, spec = self.cfg, self.mesh, bool(self.speculate)
+        return jax.jit(lambda p, b: M.prefill(p, cfg, b, mesh=mesh,
+                                              return_hidden=spec))
 
     def _build_admit(self, key):
         """Jitted admission, one dispatch, batched cache donated.
@@ -392,6 +404,7 @@ class ServeEngine:
         # EOS can finish a slot with budget left: zero it so the freed
         # lane runs masked (done = rem<=0) until re-admitted
         self.rem[slot] = 0
+        self.h_spec[slot] = 0
 
     def _admit(self) -> None:
         free = [s for s in range(self.n_slots) if self.slot_uid[s] < 0]
@@ -411,6 +424,8 @@ class ServeEngine:
                 slot = free[0]
                 logits, pc = self._prefill_exec(req.prompt_len)(self.params,
                                                                 req.batch)
+                if self.speculate:
+                    logits, h0 = logits  # return_hidden packs (logits, h)
             else:
                 # bucketed: the chunked prefill IS the placement — it
                 # writes through the slot's cache row / block tables
@@ -438,18 +453,40 @@ class ServeEngine:
             self.tok[slot] = e0
             self.pos[slot] = M.decode_pos0(self.cfg, req.prompt_len)
             self.rem[slot] = req.max_new - 1
+            if self.speculate and self.chunk_len is None:
+                # seed the draft chain with the prefill's last hidden —
+                # the hidden of the position that emitted e0 — so the
+                # slot's first step drafts hot.  Purely a speed win:
+                # draft quality never changes accepted tokens.  Chunked
+                # admission stays cold (first drafts simply rejected).
+                self.h_spec[slot] = np.asarray(h0[0])
+            else:
+                self.h_spec[slot] = 0
             self.keys[slot] = np.asarray(key)
         self.stats["peak_live_requests"] = max(
             self.stats["peak_live_requests"], int((self.slot_uid >= 0).sum()))
 
     # -- scanned decode segment --------------------------------------------
 
+    def _spec_kw(self) -> dict:
+        if not self.speculate:
+            return {}
+        return {"speculate": self.speculate,
+                "spec_h": jnp.asarray(self.h_spec)}
+
+    def spec_acceptance(self) -> float:
+        """Fraction of the k draft lanes per live step that yielded an
+        accepted token (0.0 when not speculating or nothing ran)."""
+        denom = self.stats["spec_steps"] * self.speculate
+        return self.stats["spec_extra_tokens"] / denom if denom else 0.0
+
     def _run_segment(self):
         return M.generate(self.params, self.cfg, self.cache,
                           jnp.asarray(self.tok), jnp.asarray(self.pos),
                           steps=self.seg_len, sampler=self.sampler,
                           rng=jnp.asarray(self.keys), eos_id=self.eos_id,
-                          remaining=jnp.asarray(self.rem), mesh=self.mesh)
+                          remaining=jnp.asarray(self.rem), mesh=self.mesh,
+                          **self._spec_kw())
 
     def _segment(self) -> None:
         res = self._run_segment()
@@ -466,6 +503,14 @@ class ServeEngine:
         self.pos = np.array(res["pos"])
         self.rem = np.array(res["remaining"])
         self.keys = np.array(res["rng"])
+        if self.speculate:
+            self.h_spec = np.array(res["h_spec"])
+            # a live slot always emits at column i*(k+1) of step i, so
+            # those columns count the slot's live steps; every further
+            # True column is a token the draft+verify chain got for free
+            first = valid[:, ::self.speculate + 1]
+            self.stats["spec_steps"] += int(first.sum())
+            self.stats["spec_extra_tokens"] += int(valid.sum() - first.sum())
         for s in range(self.n_slots):
             uid = int(self.slot_uid[s])
             if uid < 0:
@@ -479,7 +524,10 @@ class ServeEngine:
             if done[s]:
                 self._finish(uid)
                 self._release_slot(s)
-        self.stats["slot_steps"] += self.n_slots * self.seg_len
+        # capacity per segment is seg_len emissions per slot, times the
+        # chunk width when speculating (each step can emit up to k+1)
+        self.stats["slot_steps"] += (self.n_slots * self.seg_len
+                                     * (self.speculate + 1))
         self.stats["segments"] += 1
         self.segment_idx += 1
 
@@ -534,6 +582,12 @@ class PagedServeEngine(ServeEngine):
                  lazy: bool = True, **kw):
         self.block_len = block_len
         self.max_blocks = -(-max_len // block_len)
+        # speculative verify chunks write up to k positions past the
+        # accepted frontier; a full-capacity slot would overflow its last
+        # real table column (gathers CLAMP, aliasing the final block), so
+        # the table gets spare always-TRASH columns to absorb overshoot
+        spec = int(kw.get("speculate", 0) or 0)
+        self._spec_spare = -(-spec // block_len) if spec else 0
         # default pool: worst case every slot holds max_len live tokens
         self.n_blocks = (1 + n_slots * self.max_blocks
                          if n_blocks is None else n_blocks)
@@ -554,7 +608,8 @@ class PagedServeEngine(ServeEngine):
                 n_shards = n_data
         self.alloc = pg.PagedAllocator(self.n_blocks, block_len,
                                        n_shards=n_shards)
-        self.block_tables = np.full((n_slots, self.max_blocks), pg.TRASH,
+        self._table_w = self.max_blocks + self._spec_spare
+        self.block_tables = np.full((n_slots, self._table_w), pg.TRASH,
                                     np.int32)
         self._slot_blocks: Dict[int, List[int]] = {}  # uid -> held block ids
         super().__init__(params, cfg, n_slots=n_slots, max_len=max_len, **kw)
@@ -682,7 +737,10 @@ class PagedServeEngine(ServeEngine):
         return ids, fresh
 
     def _set_table_row(self, slot: int, ids) -> None:
-        row = np.full((self.max_blocks,), pg.TRASH, np.int32)
+        # ids never exceed max_blocks, so the _spec_spare tail columns
+        # stay TRASH for the slot's whole lifetime: speculative writes
+        # past capacity are diverted, never aliased onto a real block
+        row = np.full((self._table_w,), pg.TRASH, np.int32)
         row[:len(ids)] = ids
         self.block_tables[slot] = row
 
@@ -744,10 +802,12 @@ class PagedServeEngine(ServeEngine):
             uid = int(self.slot_uid[s])
             if uid < 0:
                 continue
-            adv = int(min(self.seg_len, self.rem[s]))
+            adv = int(min(self.seg_len * (self.speculate + 1), self.rem[s]))
             if adv <= 0:
                 continue
-            last_write = int(self.pos[s]) + adv - 1
+            # + speculate: the step that lands the last accepted token
+            # also wrote its rejected draft tail past the frontier
+            last_write = int(self.pos[s]) + adv - 1 + self.speculate
             n_total = self._n_total_blocks(self._live_req[uid])
             need = min(last_write // bl + 1, n_total)
             have = len(self._slot_blocks[uid])
@@ -808,4 +868,5 @@ class PagedServeEngine(ServeEngine):
                           steps=self.seg_len, sampler=self.sampler,
                           rng=jnp.asarray(self.keys), eos_id=self.eos_id,
                           remaining=jnp.asarray(self.rem), mesh=self.mesh,
-                          block_tables=jnp.asarray(self.block_tables))
+                          block_tables=jnp.asarray(self.block_tables),
+                          **self._spec_kw())

@@ -10,6 +10,15 @@ Greedy ignores its keys; Temperature/TopK consume one key per slot per
 step — the engine splits each slot's key stream once per decode step
 whether or not the slot is live, so a scan cut into segments samples
 exactly like one long scan.
+
+Each sampler also exposes ``verify(keys, logits, draft)`` for
+self-speculative decode: given the TARGET logits at a drafted position
+and the (greedy-drafted) token proposed there, return ``(token,
+accepted)``.  Because the drafter is greedy (a point mass), exact
+residual rejection sampling reduces to: accept the draft with
+probability p(draft) under the target distribution, else resample from
+the target with the draft masked out — the emitted marginal is exactly
+the target distribution (P(d) = p_d; P(x!=d) = (1-p_d) * p_x/(1-p_d)).
 """
 from __future__ import annotations
 
@@ -19,6 +28,21 @@ import jax
 import jax.numpy as jnp
 
 
+def _greedy_verify(logits, draft):
+    tgt = jnp.argmax(logits, -1).astype(jnp.int32)
+    return tgt, tgt == draft
+
+
+def _residual_verify(keys, logits, draft, t):
+    def one(key, l, d):
+        ka, kb = jax.random.split(key)
+        accept = jax.random.uniform(ka) < jax.nn.softmax(l / t)[d]
+        alt = jax.random.categorical(kb, l.at[d].set(-jnp.inf) / t)
+        return jnp.where(accept, d, alt).astype(jnp.int32), accept
+
+    return jax.vmap(one)(keys, logits, draft)
+
+
 @dataclasses.dataclass(frozen=True)
 class Greedy:
     """Deterministic argmax decoding."""
@@ -26,6 +50,10 @@ class Greedy:
     def __call__(self, keys, logits):
         del keys
         return jnp.argmax(logits, -1).astype(jnp.int32)
+
+    def verify(self, keys, logits, draft):
+        del keys
+        return _greedy_verify(logits, draft)
 
 
 # Below this, logits / t amplifies f32 logits toward overflow and the
@@ -51,6 +79,11 @@ class Temperature:
             lambda k, l: jax.random.categorical(k, l / self.t)
         )(keys, logits).astype(jnp.int32)
 
+    def verify(self, keys, logits, draft):
+        if self.t <= ARGMAX_TEMPERATURE:
+            return _greedy_verify(logits, draft)
+        return _residual_verify(keys, logits, draft, self.t)
+
 
 @dataclasses.dataclass(frozen=True)
 class TopK:
@@ -72,3 +105,18 @@ class TopK:
             return idx[jax.random.categorical(key, vals / self.t)]
 
         return jax.vmap(one)(keys, logits).astype(jnp.int32)
+
+    def verify(self, keys, logits, draft):
+        if self.t <= ARGMAX_TEMPERATURE:
+            return _greedy_verify(logits, draft)
+        k = min(self.k, logits.shape[-1])
+
+        def mask_topk(l):
+            vals, idx = jax.lax.top_k(l, k)
+            return jnp.full_like(l, -jnp.inf).at[idx].set(vals)
+
+        # a draft outside the top-k has p=0 under the restricted target
+        # distribution, so it is always rejected and the resample comes
+        # from the top-k set (minus the draft) — still the exact target.
+        return _residual_verify(keys, jax.vmap(mask_topk)(logits), draft,
+                                self.t)

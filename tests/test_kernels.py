@@ -391,3 +391,69 @@ def test_model_layer_uses_pallas_consistently():
     l1, _ = M.loss_fn(params, cfg, batch)
     l2, _ = M.loss_fn(params, cfg.replace(use_pallas=True), batch)
     np.testing.assert_allclose(float(l1), float(l2), rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# paged attention: multi-query chunks (speculative verify / chunked prefill)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("B,C,H,KH,D,nb,bl,nbt,window,softcap", [
+    (3, 4, 8, 4, 32, 10, 4, 6, 0, 0.0),    # GQA verify chunk
+    (2, 3, 4, 4, 16, 8, 8, 3, 0, 30.0),    # MHA + softcap
+    (2, 5, 8, 2, 32, 12, 4, 7, 6, 0.0),    # sliding window, C > window gap
+    (1, 8, 4, 1, 16, 9, 4, 6, 0, 0.0),     # MQA, chunk wider than a block
+])
+def test_paged_attention_multi_query_matches_ref(B, C, H, KH, D, nb, bl,
+                                                 nbt, window, softcap):
+    """C>1 query chunks (contiguous positions pos..pos+C-1) against the
+    gather oracle: per-query causal masks inside the chunk, blocks that
+    straddle the chunk's first/last query, GQA grouping."""
+    from repro.kernels.paged_attn.ops import paged_decode_attention
+    from repro.kernels.paged_attn.ref import paged_attention_ref
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(B, C, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, bl, KH, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bl, KH, D)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, nb, size=(B, nbt)), jnp.int32)
+    # last query must stay inside the table: pos + C - 1 <= nbt*bl - 1
+    pos = jnp.asarray(rng.integers(0, nbt * bl - C + 1, size=(B,)), jnp.int32)
+    ref = paged_attention_ref(q, kp, vp, bt, pos, window=window,
+                              softcap=softcap)
+    out = paged_decode_attention(q, kp, vp, bt, pos, window=window,
+                                 softcap=softcap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_attention_block_boundary_straddle():
+    """A chunk whose queries straddle a block boundary: the first query's
+    block is fully visible, the last query's block only partially — the
+    per-query masks must not leak future positions."""
+    from repro.kernels.paged_attn.ops import paged_decode_attention
+    from repro.kernels.paged_attn.ref import paged_attention_ref
+    rng = np.random.default_rng(2)
+    B, C, H, KH, D, nb, bl, nbt = 2, 4, 4, 2, 16, 8, 4, 5
+    q = jnp.asarray(rng.normal(size=(B, C, H, D)), jnp.float32)
+    kp = jnp.asarray(rng.normal(size=(nb, bl, KH, D)), jnp.float32)
+    vp = jnp.asarray(rng.normal(size=(nb, bl, KH, D)), jnp.float32)
+    bt = jnp.asarray(rng.integers(0, nb, size=(B, nbt)), jnp.int32)
+    pos = jnp.asarray([bl - 2, 2 * bl - 1], jnp.int32)  # straddle two ways
+    ref = paged_attention_ref(q, kp, vp, bt, pos)
+    out = paged_decode_attention(q, kp, vp, bt, pos)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_paged_read_path_multi_query_uses_pallas():
+    """ISSUE 8: the C>1 gather fallback is retired — GQA chunks route
+    through the kernel whenever cfg.use_pallas; MLA stays on gather."""
+    from repro.configs import get_config
+    from repro.models import layers
+    gqa = get_config("tinyllama-1.1b", variant="reduced")
+    mla = get_config("deepseek-v3-671b", variant="reduced")
+    on = gqa.replace(use_pallas=True)
+    assert layers.paged_read_path(on, 1) == "pallas"
+    assert layers.paged_read_path(on, 4) == "pallas"
+    assert layers.paged_read_path(gqa, 4) == "gather"        # use_pallas off
+    assert layers.paged_read_path(mla.replace(use_pallas=True), 4,
+                                  attn="mla") == "gather"    # MLA layout

@@ -1,0 +1,363 @@
+"""Self-speculative MTP decode tests (ISSUE 8).
+
+Covers:
+  * greedy bit-identity: ``generate(speculate=k)`` emits exactly the
+    token-by-token greedy stream — contiguous and paged caches, and the
+    three engines (contiguous, paged, paged+bucketed);
+  * partial-accept cache-state equivalence: after speculative steps the
+    cache is bit-identical to the token-by-token cache — accepted
+    positions carry the same k/v, rejected-draft positions are scrubbed
+    (contiguous: zeroed in place; paged: zeroed in the slot's blocks,
+    kept positions diverted to the trash block);
+  * temperature verify: the residual rejection sampler's emitted
+    marginal equals the target softmax regardless of draft quality;
+  * acceptance-length properties: every live step emits at least 1 and
+    at most k+1 tokens, the first lane of a live step is always valid,
+    and emission stops permanently once a slot finishes;
+  * (>= 8 devices) speculative + sharded + paged composition matches
+    the single-device non-speculative engine token-for-token;
+  * engines reject ``speculate`` without an MTP head.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serve import PagedServeEngine, ServeEngine
+from repro.serve.sampling import Greedy, Temperature, TopK, _residual_verify
+
+from test_serve_chunked import family_batch, run_engine
+
+MULTI = len(jax.devices()) >= 8
+needs_multi = pytest.mark.skipif(
+    not MULTI, reason="needs >= 8 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=8)")
+
+# MTP-capable families: deepseek-v3 ships n_mtp=1 natively (MLA + MoE),
+# the others opt in via replace (dense GQA exercising the C>1 Pallas
+# kernel, and GQA MoE routing under the verify chunk's live mask)
+SPEC_CASES = [
+    ("deepseek-v3-671b", {}),
+    ("tinyllama-1.1b", {"n_mtp": 1, "use_pallas": True}),
+    ("qwen2-moe-a2.7b", {"n_mtp": 1}),
+]
+
+
+def _spec_cfg(arch, over):
+    return get_config(arch, variant="reduced").replace(**over)
+
+
+def _model_setup(cfg, B=2, P=6, max_new=24, seed=0):
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 1), (B, P), 0,
+                              cfg.vocab_size)
+    logits, pc = M.prefill(params, cfg, {"tokens": toks})
+    tok0 = jnp.argmax(logits, -1).astype(jnp.int32)
+    pos0 = jnp.full((B,), M.decode_pos0(cfg, P), jnp.int32)
+    rng = jax.random.split(jax.random.PRNGKey(seed + 2), B)
+    return params, pc, tok0, pos0, rng, P
+
+
+def _emitted(res):
+    t, v = np.asarray(res["tokens"]), np.asarray(res["valid"])
+    return [t[b][v[b]].tolist() for b in range(t.shape[0])]
+
+
+def _assert_scrubbed_contiguous(cfg, cache, fpos):
+    """Every contiguous-cache row past a slot's frontier must be exactly
+    zero: rejected-draft writes are scrubbed, not just masked.  (The
+    frontier row itself holds the parked pending-token write, like the
+    plain scan's.)"""
+    bat = M.decode_cache_batch_axes(cfg)
+    seq = M.decode_cache_seq_axes(cfg)
+    for leaf, bax, sax in zip(jax.tree.leaves(cache), jax.tree.leaves(bat),
+                              jax.tree.leaves(seq)):
+        if sax < 0:
+            continue
+        sax2 = sax if sax > bax else sax + 1
+        l = np.moveaxis(np.moveaxis(np.asarray(leaf, np.float32), bax, 0),
+                        sax2, 1)
+        for b, p in enumerate(fpos):
+            assert not l[b, p + 1:].any()
+
+
+# ---------------------------------------------------------------------------
+# model layer: greedy bit-identity + cache-state equivalence
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,over", SPEC_CASES)
+@pytest.mark.parametrize("k", [1, 3])
+def test_spec_matches_ref_contiguous(arch, over, k):
+    cfg = _spec_cfg(arch, over)
+    params, pc, tok0, pos0, rng, P = _model_setup(cfg)
+    rem = jnp.full((2,), 15, jnp.int32)
+    cap = M.decode_capacity(cfg, P, 24)
+
+    def fresh():
+        c = M.init_decode_cache(cfg, 2, cap)
+        return M.prefill_into_cache(cfg, c, pc)
+
+    ref = M.generate(params, cfg, fresh(), tok0, pos0, steps=18,
+                     rng=rng, remaining=rem)
+    spec = M.generate(params, cfg, fresh(), tok0, pos0, steps=18,
+                      rng=rng, remaining=rem, speculate=k)
+    assert _emitted(spec) == _emitted(ref)
+    # partial-accept equivalence: accepted positions carry the same kv
+    # as the token-by-token cache (to float tolerance — the C-wide
+    # verify chunk reduces attention in a different shape than the C=1
+    # step) and everything past the frontier is scrubbed to EXACT zeros,
+    # matching the untouched rows of the token-by-token cache
+    for a, b in zip(jax.tree.leaves(spec["cache"]),
+                    jax.tree.leaves(ref["cache"])):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32),
+                                   atol=1e-4, rtol=1e-3)
+    _assert_scrubbed_contiguous(cfg, spec["cache"], np.asarray(spec["pos"]))
+
+
+@pytest.mark.parametrize("arch,over", SPEC_CASES)
+def test_spec_matches_ref_paged(arch, over):
+    cfg = _spec_cfg(arch, over)
+    params, pc, tok0, pos0, rng, P = _model_setup(cfg)
+    B, bl, W, k = 2, 4, 12, 3
+    rem = jnp.full((B,), 15, jnp.int32)
+    n_pb = -(-M.decode_pos0(cfg, P) // bl)
+    tables = np.stack([np.arange(1 + W * b, 1 + W * (b + 1), dtype=np.int32)
+                       for b in range(B)])
+    sub = M.prefill_into_cache(cfg, M.init_decode_cache(cfg, B, n_pb * bl), pc)
+    bat = M.decode_cache_batch_axes(cfg)
+
+    def fresh():
+        c = M.init_paged_cache(cfg, B, 1 + B * W, bl)
+        for b in range(B):
+            sub_b = jax.tree.map(
+                lambda x, ax: jax.lax.index_in_dim(x, b, ax, keepdims=True),
+                sub, bat)
+            c = M.scatter_prefill_paged(
+                cfg, c, sub_b, b, jnp.asarray(tables[b][:n_pb]),
+                jnp.ones((n_pb,), jnp.bool_), block_len=bl)
+        return c
+
+    bt = jnp.asarray(tables)
+    ref = M.generate(params, cfg, fresh(), tok0, pos0, steps=18, rng=rng,
+                     remaining=rem, block_tables=bt)
+    spec = M.generate(params, cfg, fresh(), tok0, pos0, steps=18, rng=rng,
+                      remaining=rem, block_tables=bt, speculate=k)
+    assert _emitted(spec) == _emitted(ref)
+    # pool equivalence outside the trash block: accepted writes match the
+    # token-by-token stream, rejected writes in the slots' own blocks are
+    # zeroed (kept positions divert their zero-write to trash block 0,
+    # which is scratch by contract and excluded here)
+    def nontrash(leaf):
+        if leaf.ndim and leaf.shape[0] == 1 + B * W:  # pool leaf
+            return np.asarray(leaf, np.float32)[1:]
+        return np.asarray(leaf, np.float32)
+
+    # pool equivalence outside the trash block (scratch by contract):
+    # accepted writes match the token-by-token stream to float tolerance,
+    # and each slot's blocks past the frontier hold EXACT zeros — the
+    # rejected-draft writes were scrubbed via trash-diverted zero-writes
+    for a, b in zip(jax.tree.leaves(spec["cache"]),
+                    jax.tree.leaves(ref["cache"])):
+        np.testing.assert_allclose(nontrash(a), nontrash(b),
+                                   atol=1e-4, rtol=1e-3)
+    fpos = np.asarray(spec["pos"])
+    for leaf in jax.tree.leaves(spec["cache"]):
+        if not (leaf.ndim and leaf.shape[0] == 1 + B * W):
+            continue
+        pool = np.asarray(leaf, np.float32)
+        for b in range(B):
+            flat = pool[tables[b]].reshape((W * bl,) + pool.shape[2:])
+            assert not flat[fpos[b] + 1:].any()
+
+
+@pytest.mark.parametrize("k", [2, 4])
+def test_acceptance_length_properties(k):
+    cfg = _spec_cfg(*SPEC_CASES[0])
+    params, pc, tok0, pos0, rng, P = _model_setup(cfg)
+    rem = jnp.asarray([21, 7], jnp.int32)  # second slot finishes early
+    cache = M.prefill_into_cache(
+        cfg, M.init_decode_cache(cfg, 2, M.decode_capacity(cfg, P, 24)), pc)
+    res = M.generate(params, cfg, cache, tok0, pos0, steps=12, rng=rng,
+                     remaining=rem, speculate=k)
+    valid = np.asarray(res["valid"])
+    C = k + 1
+    for b in range(2):
+        per_step = valid[b].reshape(-1, C)
+        alive = per_step.sum(1) > 0
+        # a live step emits >= 1 (verified resample is unconditional) and
+        # <= k+1; its first lane is always the emission that is never
+        # rolled back
+        assert all(per_step[alive, 0])
+        assert per_step.sum(1).max() <= C
+        # once dead, dead forever
+        first_dead = np.argmin(alive) if not alive.all() else len(alive)
+        assert not per_step[first_dead:].any()
+        # no eos here, so the only stop is the emission budget: a slot
+        # that died inside the scan spent exactly `remaining`; one still
+        # alive at the end must not have overdrawn it
+        if not alive.all():
+            assert valid[b].sum() == int(rem[b])
+        else:
+            assert valid[b].sum() < int(rem[b])
+
+
+# ---------------------------------------------------------------------------
+# temperature verify: residual rejection sampling is exact
+# ---------------------------------------------------------------------------
+
+def test_residual_verify_matches_target_distribution():
+    V, N, t = 6, 20000, 0.8
+    logits = jnp.asarray([1.2, -0.3, 0.7, 2.0, -1.0, 0.1])
+    target = np.asarray(jax.nn.softmax(logits / t))
+    keys = jax.random.split(jax.random.PRNGKey(0), N)
+    for d in (3, 4):  # a good draft (modal) and a bad one (rare token)
+        draft = jnp.full((N,), d, jnp.int32)
+        toks, acc = _residual_verify(keys,
+                                     jnp.broadcast_to(logits, (N, V)),
+                                     draft, t)
+        toks = np.asarray(toks)
+        emp = np.bincount(toks, minlength=V) / N
+        # emitted marginal == target regardless of the draft
+        np.testing.assert_allclose(emp, target, atol=0.02)
+        # acceptance rate == target prob of the drafted token
+        np.testing.assert_allclose(np.asarray(acc).mean(), target[d],
+                                   atol=0.02)
+        # rejections never emit the draft
+        assert not np.any(toks[~np.asarray(acc)] == d)
+
+
+def test_verify_methods_greedy_limits():
+    """t -> 0 verify degenerates to exact argmax prefix matching."""
+    logits = jnp.asarray([[0.1, 2.0, -1.0], [3.0, 0.0, 0.2]])
+    keys = jax.random.split(jax.random.PRNGKey(1), 2)
+    draft = jnp.asarray([1, 1], jnp.int32)
+    for s in (Greedy(), Temperature(0.0), TopK(2, 0.0)):
+        tok, acc = s.verify(keys, logits, draft)
+        np.testing.assert_array_equal(np.asarray(tok), [1, 0])
+        np.testing.assert_array_equal(np.asarray(acc), [True, False])
+
+
+# ---------------------------------------------------------------------------
+# engines: speculative == plain, all layouts
+# ---------------------------------------------------------------------------
+
+TRAFFIC = [(6, 8), (9, 12), (7, 10), (11, 6)]
+
+
+def _engine_traffic(cfg):
+    batches = [family_batch(cfg, p, seed=10 + i)
+               for i, (p, _) in enumerate(TRAFFIC)]
+    max_len = max(M.decode_capacity(cfg, p, g) for p, g in TRAFFIC)
+    return batches, max_len
+
+
+@pytest.mark.parametrize("arch,over", SPEC_CASES)
+def test_spec_engines_match_plain(arch, over):
+    cfg = _spec_cfg(arch, over)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    batches, max_len = _engine_traffic(cfg)
+    ref, _ = run_engine(ServeEngine, params, cfg, batches, TRAFFIC, max_len,
+                        n_slots=2, seg_len=3, seed=0)
+    spec, e1 = run_engine(ServeEngine, params, cfg, batches, TRAFFIC,
+                          max_len, n_slots=2, seg_len=3, seed=0, speculate=3)
+    paged, e2 = run_engine(PagedServeEngine, params, cfg, batches, TRAFFIC,
+                           max_len, n_slots=2, seg_len=3, seed=0,
+                           block_len=4, speculate=3)
+    buck, e3 = run_engine(PagedServeEngine, params, cfg, batches, TRAFFIC,
+                          max_len, n_slots=2, seg_len=3, seed=0, block_len=4,
+                          chunk_len=4, speculate=3)
+    assert spec == ref and paged == ref and buck == ref
+    for e in (e1, e2, e3):
+        assert e.stats["spec_steps"] > 0
+        assert 0.0 <= e.spec_acceptance() <= 1.0
+
+
+def test_spec_engine_full_capacity_overshoot():
+    """A request generating to the exact cache capacity: the last verify
+    chunks overshoot the final block — spare TRASH table columns must
+    absorb them (a clamped gather would alias the last real block)."""
+    cfg = _spec_cfg(*SPEC_CASES[0])
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    P, G = 6, 10
+    max_len = M.decode_capacity(cfg, P, G)
+    batches = [family_batch(cfg, P, seed=3)]
+    ref, _ = run_engine(ServeEngine, params, cfg, batches, [(P, G)], max_len,
+                        n_slots=2, seg_len=3, seed=0)
+    # block_len 4 with speculate 6 forces _spec_spare > 1
+    spec, eng = run_engine(PagedServeEngine, params, cfg, batches, [(P, G)],
+                           max_len, n_slots=2, seg_len=3, seed=0,
+                           block_len=4, speculate=6)
+    assert spec == ref
+    assert eng._spec_spare == 2
+    assert eng.block_tables.shape[1] == eng.max_blocks + 2
+
+
+def test_spec_requires_mtp_head():
+    cfg = get_config("tinyllama-1.1b", variant="reduced")  # n_mtp = 0
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    with pytest.raises(ValueError, match="MTP"):
+        ServeEngine(params, cfg, max_len=32, speculate=3)
+
+
+def test_mtp_chain_loss_depth1_matches_mtp_loss():
+    """Chained MTP training loss at depth 1 IS the stock ``_mtp_loss``
+    (same norm/proj/block wiring, same roll-and-mask bookkeeping)."""
+    cfg = _spec_cfg(*SPEC_CASES[0])
+    params = M.init_params(jax.random.PRNGKey(2), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 12), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+    h, _, _, _ = M.backbone(params, cfg, batch)
+    ref = M._mtp_loss(params, cfg, h, batch)
+    got = M.mtp_chain_loss(params, cfg, batch, depth=1)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
+                               rtol=1e-5, atol=1e-6)
+    # deeper chains add terms; still a finite scalar
+    deep = M.mtp_chain_loss(params, cfg, batch, depth=3)
+    assert np.isfinite(np.asarray(deep))
+
+
+def test_spec_admission_seeds_draft_hidden():
+    """Unbucketed admission warm-starts ``h_spec`` from the prefill's
+    last hidden (the position that emitted the first token) — the first
+    speculative step drafts hot instead of burning its lanes on a zero
+    seed.  Chunked admission stays cold."""
+    cfg = _spec_cfg(*SPEC_CASES[0])
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    P = 6
+    eng = ServeEngine(params, cfg, n_slots=2, max_len=32, seg_len=3,
+                      speculate=3)
+    eng.submit(family_batch(cfg, P, seed=0), max_new=8)
+    eng._admit()
+    assert np.abs(eng.h_spec[0]).sum() > 0
+    (_, h0), _ = M.prefill(params, cfg, family_batch(cfg, P, seed=0),
+                           return_hidden=True)
+    np.testing.assert_array_equal(eng.h_spec[0], np.asarray(h0[0]))
+    cold = ServeEngine(params, cfg, n_slots=2, max_len=64, seg_len=3,
+                       speculate=3, chunk_len=4)
+    cold.submit(family_batch(cfg, P, seed=0), max_new=8)
+    cold._admit()
+    assert not np.abs(cold.h_spec[0]).sum()
+
+
+@needs_multi
+@pytest.mark.parametrize("arch,over", [SPEC_CASES[0], SPEC_CASES[2]])
+def test_spec_sharded_matches_single_device(arch, over):
+    """speculate + paged + 8-way mesh vs the plain single-device engine:
+    token-identical completions (MoE runs dropless, liveness-masked)."""
+    from repro.launch.mesh import make_decode_mesh
+    cfg = _spec_cfg(arch, over)
+    params = M.init_params(jax.random.PRNGKey(1), cfg)
+    batches, max_len = _engine_traffic(cfg)
+    ref, _ = run_engine(ServeEngine, params, cfg, batches, TRAFFIC, max_len,
+                        n_slots=2, seg_len=3, seed=0)
+    mesh = make_decode_mesh(8)
+    sh, _ = run_engine(ServeEngine, params, cfg, batches, TRAFFIC, max_len,
+                       n_slots=2, seg_len=3, seed=0, mesh=mesh, speculate=3)
+    psh, _ = run_engine(PagedServeEngine, params, cfg, batches, TRAFFIC,
+                        max_len, n_slots=2, seg_len=3, seed=0, mesh=mesh,
+                        block_len=4, speculate=3)
+    assert sh == ref and psh == ref
