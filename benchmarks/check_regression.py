@@ -24,11 +24,14 @@ BENCH_FILES = ("BENCH_serve.json", "BENCH_fleet.json")
 # code.  HIGHER-is-better: same-run speedup ratios and deterministic
 # capacity/compile-reduction ratios.  LOWER-is-better: executable build
 # counts (deterministic — any growth is a real compile-bound
-# regression).  Absolute tok_s is reported as INFO only; its
-# regressions surface through the speedup ratios computed in-run.
+# regression) and byte footprints (cache layouts and quantized
+# optimizer state are pure functions of the config — any growth means
+# a storage-policy regression).  Absolute tok_s is reported as INFO
+# only; its regressions surface through the speedup ratios computed
+# in-run.
 HIGHER_KEYS = ("speedup", "concurrency_gain", "compile_reduction",
-               "acceptance_rate")
-LOWER_KEYS = ("compiles",)
+               "acceptance_rate", "devices_per_host")
+LOWER_KEYS = ("compiles", "cache_bytes", "opt_bytes")
 INFO_KEYS = ("tok_s",)
 
 

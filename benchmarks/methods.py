@@ -110,6 +110,43 @@ def moe_dispatch_bench(T: int = 512, D: int = 128, F: int = 256, E: int = 8,
     return out
 
 
+def _train_state_bytes(cfg, policy: str) -> int:
+    """Persistent per-device training state (params + AdamW state) under
+    a moment policy — abstract shapes only, nothing is allocated.  This
+    is what bounds how many simulated devices one host can keep resident
+    between fleet steps (gradients are transient inside the jitted
+    epoch)."""
+    import jax
+    from repro.models import model as M
+    from repro.optim import adamw_init
+
+    def build():
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+        return params, adamw_init(params, policy=policy)
+
+    tree = jax.eval_shape(build)
+    return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
+
+
+def fleet_opt_state_column(log=print):
+    """The devices-per-host column for BENCH_fleet.json: summed resident
+    training-state bytes across one device of each fleet arch, fp32
+    moments vs the int8-v / bf16-m policy.  Deterministic byte counts —
+    the ratio is how many MORE devices fit a fixed host budget."""
+    cfgs = device_families()
+    fp32 = sum(_train_state_bytes(c, "") for c in cfgs)
+    int8 = sum(_train_state_bytes(c, "int8") for c in cfgs)
+    col = {
+        "opt_bytes_fp32": fp32,
+        "opt_bytes_int8": int8,
+        "state_policy": "int8 (m bf16, v int8 + per-tensor scale)",
+        "devices_per_host_gain": round(fp32 / int8, 2),
+    }
+    log(f"fleet opt state: {fp32} B fp32 vs {int8} B int8 policy "
+        f"({col['devices_per_host_gain']}x devices per host)")
+    return col
+
+
 def fleet_scaling_bench(sizes=(8, 32, 64), *, seed: int = 0, log=print):
     """Device-fleet wall-clock: sequential per-step loops (the seed's
     path, one host sync per step) vs the arch-bucketed vmapped
@@ -185,6 +222,7 @@ def fleet_scaling_bench(sizes=(8, 32, 64), *, seed: int = 0, log=print):
                  "parallel accelerators the bucketed batch feeds the "
                  "hardware directly and the gap widens accordingly."),
         "results": results,
+        "opt_state": fleet_opt_state_column(log=log),
     }
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json")
     with open(out, "w") as f:

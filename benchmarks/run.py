@@ -277,7 +277,31 @@ def serving_paged():
          row["paged_engine"]["shared_blocks"])
     summary("serving_paged",
             {"contiguous": row["contiguous"], "paged": row["paged_engine"]},
-            baseline="contiguous", concurrency_gain=row["concurrency_gain"])
+            baseline="contiguous", concurrency_gain=row["concurrency_gain"],
+            cache_bytes=f"{row['paged_engine']['cache_bytes']}/"
+                        f"{row['contiguous']['cache_bytes']}")
+
+
+def serving_quantized():
+    """Equal-cache-bytes capacity: fp32 paged vs int8-KV paged reading
+    through the fused-dequant Pallas kernel, greedy outputs asserted
+    identical.  Appends the "quantized" row to BENCH_serve.json."""
+    from benchmarks.serving import serving_quantized_bench
+    row = serving_quantized_bench(log=_quiet)
+    for name in ("paged_fp32", "paged_quantized"):
+        emit(f"serve_quant/{name}", row[name]["wall_s"] * 1e6,
+             f"peak_live={row[name]['peak_live_requests']};"
+             f"bytes={row[name]['cache_bytes']}")
+    emit("serve_quant/concurrency_gain_quant", 0.0,
+         row["concurrency_gain_quant"])
+    summary("serving_quantized",
+            {"paged_fp32": row["paged_fp32"],
+             "paged_quantized": row["paged_quantized"]},
+            baseline="paged_fp32",
+            concurrency_gain_quant=row["concurrency_gain_quant"],
+            kv_dtype=row["kv_dtype"], read_path=row["read_path"],
+            cache_bytes=f"{row['paged_quantized']['cache_bytes']}/"
+                        f"{row['paged_fp32']['cache_bytes']}")
 
 
 def serving_bucketed():
@@ -330,12 +354,16 @@ def serving_speculative():
 def fleet_scaling(sizes=(8, 32, 64)):
     """Device-fleet wall-clock: sequential per-step loops vs the
     vmapped scan-epoch driver.  Also writes BENCH_fleet.json."""
-    from benchmarks.methods import fleet_scaling_bench
+    from benchmarks.methods import fleet_opt_state_column, fleet_scaling_bench
     for n, row in fleet_scaling_bench(sizes, log=_quiet).items():
         emit(f"fleet/{n}/sequential", row["sequential_s"] * 1e6,
              f"{row['n_buckets']}buckets")
         emit(f"fleet/{n}/vmapped", row["fleet_s"] * 1e6,
              f"speedup={row['speedup']}x")
+    col = fleet_opt_state_column(log=_quiet)
+    emit("fleet/devices_per_host_gain", 0.0, col["devices_per_host_gain"])
+    emit("fleet/opt_bytes_int8_vs_fp32", 0.0,
+         f"{col['opt_bytes_int8']}/{col['opt_bytes_fp32']}")
 
 
 ALL_BENCHES = {
@@ -350,6 +378,7 @@ ALL_BENCHES = {
     "fleet_scaling": fleet_scaling,
     "serving": serving,
     "serving_paged": serving_paged,
+    "serving_quantized": serving_quantized,
     "serving_bucketed": serving_bucketed,
     "serving_sharded": serving_sharded,
     "serving_speculative": serving_speculative,

@@ -128,10 +128,10 @@ def _device_step_fn(cfg: ModelConfig):
     return jax.jit(_step_core(cfg))
 
 
-def _device_init(spec: DeviceSpec, seed: int):
+def _device_init(spec: DeviceSpec, seed: int, state_policy: str = ""):
     params = M.init_params(
         jax.random.PRNGKey(seed * 100003 + spec.device_id), spec.cfg)
-    return params, adamw_init(params)
+    return params, adamw_init(params, policy=state_policy)
 
 
 def _upload(spec: DeviceSpec, corpus: FederatedCorpus, params,
@@ -148,14 +148,19 @@ def _upload(spec: DeviceSpec, corpus: FederatedCorpus, params,
 
 def train_device(spec: DeviceSpec, corpus: FederatedCorpus, *, steps: int,
                  batch: int, seq_len: int, lr: float = 3e-3,
-                 seed: int = 0, compiled: bool = True) -> Dict:
+                 seed: int = 0, compiled: bool = True,
+                 state_policy: str = "") -> Dict:
     """Local training.  Returns {"params", "embedding", "losses", ...}.
 
     ``compiled=True`` (default) runs the epoch as one scanned program;
     ``compiled=False`` keeps the historical per-step loop (one host sync
     per step) for equivalence tests and benchmarks.
+
+    ``state_policy`` ('' | 'bf16' | 'int8') sets the AdamW moment
+    storage (see ``repro.optim.adamw.resolve_moment_policy``); the
+    scanned epoch needs no plumbing — it retraces per state structure.
     """
-    params, opt = _device_init(spec, seed)
+    params, opt = _device_init(spec, seed, state_policy)
     warmup = max(steps // 20, 1)
     if compiled:
         batches = corpus.device_batches(spec.device_id, steps, batch, seq_len)
@@ -175,7 +180,7 @@ def train_device(spec: DeviceSpec, corpus: FederatedCorpus, *, steps: int,
 
 def train_fleet(fleet: Sequence[DeviceSpec], corpus: FederatedCorpus, *,
                 steps: int, batch: int, seq_len: int, lr: float = 3e-3,
-                seed: int = 0) -> List[Dict]:
+                seed: int = 0, state_policy: str = "") -> List[Dict]:
     """Arch-bucketed compiled fleet training.
 
     Groups the fleet by ``ModelConfig``, stacks each bucket's init
@@ -183,6 +188,11 @@ def train_fleet(fleet: Sequence[DeviceSpec], corpus: FederatedCorpus, *,
     device axis, and runs the vmapped scanned epoch once per bucket.
     Returns uploads in the fleet's original order, identical to calling
     ``train_device`` per spec (same seeds, same batches).
+
+    ``state_policy`` quantizes each device's stacked AdamW moments
+    ('bf16' halves them; 'int8' quarters v) so a host fits measurably
+    more devices per bucket at equal bytes — the paper's
+    resource-constrained edge fleet at scale.
     """
     buckets: Dict[ModelConfig, List[DeviceSpec]] = {}
     for spec in fleet:
@@ -191,7 +201,7 @@ def train_fleet(fleet: Sequence[DeviceSpec], corpus: FederatedCorpus, *,
     uploads: Dict[int, Dict] = {}
     warmup = max(steps // 20, 1)
     for cfg, specs in buckets.items():
-        inits = [_device_init(s, seed) for s in specs]
+        inits = [_device_init(s, seed, state_policy) for s in specs]
         params = jax.tree.map(lambda *xs: jnp.stack(xs),
                               *[p for p, _ in inits])
         opt = jax.tree.map(lambda *xs: jnp.stack(xs), *[o for _, o in inits])

@@ -47,6 +47,10 @@ class ServerConfig:
     vaa_heads: int = 4
     p_q: int = 64                 # total VAA queries
     seed: int = 0
+    # AdamW moment storage for Phase II distillation ('' | 'bf16' |
+    # 'int8', see repro.optim.adamw.resolve_moment_policy); the compiled
+    # epoch retraces per state structure, no key change needed
+    state_policy: str = ""
 
 
 @functools.lru_cache(maxsize=64)
@@ -129,7 +133,7 @@ class DeepFusionServer:
             d_teacher=t_cfg.d_model, d=scfg.vaa_dim, n_heads=scfg.vaa_heads,
             p_q=scfg.p_q)
         trainable = {"student": s_params, "vaa": vaa_params}
-        opt = adamw_init(trainable)
+        opt = adamw_init(trainable, policy=scfg.state_policy)
         epoch = _distill_epoch_fn(base_cfg, t_cfg, scfg.alpha, scfg.beta,
                                   scfg.temperature, scfg.n_stages,
                                   scfg.vaa_heads, scfg.p_q,

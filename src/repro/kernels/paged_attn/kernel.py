@@ -36,9 +36,13 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1.0e30
 
 
-def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
-                  m_scr, l_scr, acc_scr, *, scale: float, window: int,
-                  softcap: float, block_len: int, n_q: int):
+def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, *rest,
+                  scale: float, window: int, softcap: float,
+                  block_len: int, n_q: int, quantized: bool):
+    if quantized:
+        ks_ref, vs_ref, o_ref, m_scr, l_scr, acc_scr = rest
+    else:
+        o_ref, m_scr, l_scr, acc_scr = rest
     b = pl.program_id(0)
     j = pl.program_id(2)
     nj = pl.num_programs(2)
@@ -62,6 +66,11 @@ def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
         q = q_ref[0, 0].astype(jnp.float32)        # (C, G, Dq)
         k = k_ref[0, :, 0].astype(jnp.float32)     # (bl, Dq)
         v = v_ref[0, :, 0].astype(jnp.float32)     # (bl, Dv)
+        if quantized:
+            # dequantize the DMA'd pool rows in-register: per-(position,
+            # kv-head) scales ride the same block-table indirection
+            k = k * ks_ref[0, :, 0][:, None]       # (bl,) scales
+            v = v * vs_ref[0, :, 0][:, None]
         s = jax.lax.dot_general(
             q.reshape(C * G, -1), k, (((1,), (1,)), ((), ()))
         ).reshape(C, G, block_len) * scale
@@ -95,28 +104,50 @@ def _paged_kernel(bt_ref, pos_ref, q_ref, k_ref, v_ref, o_ref,
 
 def paged_attention_bhgd(q, k_pool, v_pool, block_table, pos, *,
                          scale: float, window: int, softcap: float,
-                         interpret: bool = False):
+                         interpret: bool = False, k_scale=None,
+                         v_scale=None, out_dtype=None):
     """q: (B, KH, C, G, Dq); pools: (n_blocks, bl, KH, D*);
     block_table: (B, nbt) int32; pos: (B,) int32 position of the FIRST
-    query (queries sit at pos .. pos + C - 1) -> (B, KH, C, G, Dv)."""
+    query (queries sit at pos .. pos + C - 1) -> (B, KH, C, G, Dv).
+
+    ``k_scale``/``v_scale`` (n_blocks, bl, KH) float32 mark a quantized
+    pool (int8/fp8 rows); they ride the same block-table indirection and
+    the kernel dequantizes each DMA'd row in-register — no extra HBM
+    round-trip.  ``out_dtype`` overrides the output dtype (required when
+    the pool dtype is the quantized storage dtype)."""
     B, KH, C, G, Dq = q.shape
     bl = k_pool.shape[1]
     Dv = v_pool.shape[-1]
     nbt = block_table.shape[1]
+    quantized = k_scale is not None
+    if out_dtype is None:
+        out_dtype = v_pool.dtype
 
     kern = functools.partial(_paged_kernel, scale=scale, window=window,
-                             softcap=softcap, block_len=bl, n_q=C)
+                             softcap=softcap, block_len=bl, n_q=C,
+                             quantized=quantized)
+    in_specs = [
+        pl.BlockSpec((1, 1, C, G, Dq),
+                     lambda b, h, j, bt, pos: (b, h, 0, 0, 0)),
+        pl.BlockSpec((1, bl, 1, Dq),
+                     lambda b, h, j, bt, pos: (bt[b, j], 0, h, 0)),
+        pl.BlockSpec((1, bl, 1, Dv),
+                     lambda b, h, j, bt, pos: (bt[b, j], 0, h, 0)),
+    ]
+    operands = [q, k_pool, v_pool]
+    if quantized:
+        in_specs += [
+            pl.BlockSpec((1, bl, 1),
+                         lambda b, h, j, bt, pos: (bt[b, j], 0, h)),
+            pl.BlockSpec((1, bl, 1),
+                         lambda b, h, j, bt, pos: (bt[b, j], 0, h)),
+        ]
+        operands += [k_scale.astype(jnp.float32),
+                     v_scale.astype(jnp.float32)]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=(B, KH, nbt),
-        in_specs=[
-            pl.BlockSpec((1, 1, C, G, Dq),
-                         lambda b, h, j, bt, pos: (b, h, 0, 0, 0)),
-            pl.BlockSpec((1, bl, 1, Dq),
-                         lambda b, h, j, bt, pos: (bt[b, j], 0, h, 0)),
-            pl.BlockSpec((1, bl, 1, Dv),
-                         lambda b, h, j, bt, pos: (bt[b, j], 0, h, 0)),
-        ],
+        in_specs=in_specs,
         out_specs=pl.BlockSpec((1, 1, C, G, Dv),
                                lambda b, h, j, bt, pos: (b, h, 0, 0, 0)),
         scratch_shapes=[
@@ -128,6 +159,6 @@ def paged_attention_bhgd(q, k_pool, v_pool, block_table, pos, *,
     return pl.pallas_call(
         kern,
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((B, KH, C, G, Dv), v_pool.dtype),
+        out_shape=jax.ShapeDtypeStruct((B, KH, C, G, Dv), out_dtype),
         interpret=interpret,
-    )(block_table.astype(jnp.int32), pos.astype(jnp.int32), q, k_pool, v_pool)
+    )(block_table.astype(jnp.int32), pos.astype(jnp.int32), *operands)

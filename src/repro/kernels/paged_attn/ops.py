@@ -25,11 +25,12 @@ def _on_cpu() -> bool:
 
 
 @functools.partial(jax.jit, static_argnames=("window", "softcap", "scale",
-                                             "interpret"))
+                                             "interpret", "out_dtype"))
 def paged_decode_attention(q, k_pool, v_pool, block_table, pos, *,
                            window: int = 0, softcap: float = 0.0,
                            scale: float | None = None,
-                           interpret: bool | None = None):
+                           interpret: bool | None = None,
+                           k_scale=None, v_scale=None, out_dtype=None):
     """q: (B, C, H, Dq); pools: (n_blocks, block_len, KH, D*);
     block_table: (B, nbt); pos: (B,) position of the FIRST query
     (queries are consecutive) -> (B, C, H, Dv).
@@ -37,9 +38,18 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, pos, *,
     GQA stays grouped: each (slot, kv-head) grid cell attends its
     H // KH query heads (for all C chunk positions) against one DMA of
     the head's pool rows.
+
+    Quantized pools (int8/fp8 under a ``CachePolicy``) pass their
+    per-(position, kv-head) float32 ``k_scale``/``v_scale`` pools
+    (n_blocks, block_len, KH); dequant happens inside the kernel on the
+    DMA'd rows.  ``out_dtype`` (static) names the activation dtype to
+    produce — mandatory for quantized pools, where ``v_pool.dtype``
+    would otherwise leak int8 into the residual stream.
     """
     if interpret is None:
         interpret = _on_cpu()
+    if (k_scale is None) != (v_scale is None):
+        raise ValueError("k_scale and v_scale must be passed together")
     B, C, H, Dq = q.shape
     KH = k_pool.shape[2]
     G = H // KH
@@ -50,5 +60,6 @@ def paged_decode_attention(q, k_pool, v_pool, block_table, pos, *,
                                jnp.asarray(block_table, jnp.int32),
                                jnp.asarray(pos, jnp.int32), scale=scale,
                                window=window, softcap=softcap,
-                               interpret=interpret)
+                               interpret=interpret, k_scale=k_scale,
+                               v_scale=v_scale, out_dtype=out_dtype)
     return out.transpose(0, 2, 1, 3, 4).reshape(B, C, H, v_pool.shape[-1])

@@ -20,16 +20,28 @@ NEG_INF = -1.0e30
 
 
 def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *,
-                        window: int = 0, softcap: float = 0.0, scale=None):
+                        window: int = 0, softcap: float = 0.0, scale=None,
+                        k_scale=None, v_scale=None, out_dtype=None):
     """q: (B, C, H, Dq); pools: (n_blocks, block_len, KH, D*);
-    block_table: (B, nbt) int32; pos: (B,) int32 -> (B, C, H, Dv)."""
+    block_table: (B, nbt) int32; pos: (B,) int32 -> (B, C, H, Dv).
+
+    ``k_scale``/``v_scale`` (n_blocks, block_len, KH) mark quantized
+    pools: the gathered views are dequantized per row before the dense
+    scores, mirroring the kernel's in-register dequant."""
     B, C, H, Dq = q.shape
     KH = k_pool.shape[2]
     G = H // KH
     if scale is None:
         scale = 1.0 / math.sqrt(Dq)
+    if out_dtype is None:
+        out_dtype = v_pool.dtype
     kg = k_pool[block_table].reshape((B, -1) + k_pool.shape[2:])
     vg = v_pool[block_table].reshape((B, -1) + v_pool.shape[2:])
+    if k_scale is not None:
+        ksg = k_scale[block_table].reshape((B, -1) + k_scale.shape[2:])
+        vsg = v_scale[block_table].reshape((B, -1) + v_scale.shape[2:])
+        kg = kg.astype(jnp.float32) * ksg[..., None].astype(jnp.float32)
+        vg = vg.astype(jnp.float32) * vsg[..., None].astype(jnp.float32)
     S = kg.shape[1]
     qr = q.reshape(B, C, KH, G, Dq)
     s = jnp.einsum("bqhgd,bkhd->bhgqk", qr.astype(jnp.float32),
@@ -44,4 +56,4 @@ def paged_attention_ref(q, k_pool, v_pool, block_table, pos, *,
     s = jnp.where(ok[:, None, None], s, NEG_INF)
     w = jax.nn.softmax(s, axis=-1)
     o = jnp.einsum("bhgqk,bkhd->bqhgd", w, vg.astype(jnp.float32))
-    return o.reshape(B, C, H, vg.shape[-1]).astype(v_pool.dtype)
+    return o.reshape(B, C, H, vg.shape[-1]).astype(out_dtype)

@@ -107,6 +107,13 @@ def main():
     ap.add_argument("--check-unspeculated", action="store_true",
                     help="replay the same traffic without speculation and "
                          "fail unless completions match")
+    ap.add_argument("--kv-dtype", default="",
+                    choices=["", "fp32", "bf16", "fp8", "int8"],
+                    help="KV-cache storage policy: int8/fp8 quantize pool "
+                         "rows with per-position scales (repro.models.quant)")
+    ap.add_argument("--check-unquantized", action="store_true",
+                    help="replay the same traffic at full precision and "
+                         "fail unless greedy completions match")
     args = ap.parse_args()
     if args.buckets and not args.bucket:
         ap.error("--buckets requires --bucket")
@@ -116,6 +123,8 @@ def main():
         ap.error("--check-unsharded requires --sharded")
     if args.check_unspeculated and not args.speculate:
         ap.error("--check-unspeculated requires --speculate")
+    if args.check_unquantized and args.kv_dtype not in ("int8", "fp8"):
+        ap.error("--check-unquantized requires a quantized --kv-dtype")
 
     cfg = get_config(args.arch, variant=args.variant)
     if args.variant == "reduced":
@@ -141,6 +150,8 @@ def main():
             bucket_kw["buckets"] = [int(b) for b in args.buckets.split(",")]
     if args.speculate:
         bucket_kw["speculate"] = args.n_draft  # rides every engine below
+    if args.kv_dtype:
+        bucket_kw["kv_dtype"] = args.kv_dtype
     with mesh:
         if args.paged:
             engine = PagedServeEngine(
@@ -177,6 +188,14 @@ def main():
               f"(free after drain: {engine.alloc.n_free}, "
               f"read path: {paged_read_path(cfg, 1)}, "
               f"allocator shards: {engine.alloc.n_shards})")
+    if args.kv_dtype:
+        cache_bytes = (M.paged_cache_nbytes(cfg, args.slots, engine.n_blocks,
+                                            engine.block_len,
+                                            policy=engine.policy)
+                       if args.paged else
+                       M.cache_nbytes(cfg, args.slots, max_len,
+                                      policy=engine.policy))
+        print(f"kv-dtype: {args.kv_dtype} cache_bytes={cache_bytes}")
     if args.sharded:
         print(f"sharded: mesh={dict(mesh.shape)} "
               f"overlap_a2a={cfg.overlap_a2a}")
@@ -256,6 +275,31 @@ def main():
         print(f"check-unspeculated: completions match "
               f"({engine.stats['segments']} speculative segments vs "
               f"{ref.stats['segments']} plain, replay {ref_dt:.2f}s)")
+    if args.check_unquantized:
+        fp_kw = {k: v for k, v in bucket_kw.items() if k != "kv_dtype"}
+        with mesh:
+            if args.paged:
+                ref = PagedServeEngine(
+                    params, cfg, n_slots=args.slots, max_len=max_len,
+                    sampler=pick_sampler(args), seg_len=args.seg_len,
+                    mesh=mesh, block_len=args.block_len,
+                    n_blocks=args.blocks or None,
+                    lazy=not args.eager_blocks, **fp_kw)
+            else:
+                ref = ServeEngine(params, cfg, n_slots=args.slots,
+                                  max_len=max_len, sampler=pick_sampler(args),
+                                  seg_len=args.seg_len, mesh=mesh, **fp_kw)
+            for b, (_, g) in zip(batches, lengths):
+                ref.submit(b, max_new=g)
+            ref_comps = ref.run()
+        got = {u: c.tokens.tolist() for u, c in comps.items()}
+        want = {u: c.tokens.tolist() for u, c in ref_comps.items()}
+        if got != want:
+            raise SystemExit(
+                f"{args.kv_dtype} completions diverged from full "
+                f"precision: {got} != {want}")
+        print(f"check-unquantized: {args.kv_dtype} completions match "
+              f"full precision")
 
 
 if __name__ == "__main__":

@@ -21,6 +21,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from repro.models import quant
 from repro.models.config import ModelConfig
 
 NEG_INF = -1.0e30
@@ -380,7 +381,7 @@ def paged_read_path(cfg: ModelConfig, C: int, attn: str = "gqa") -> str:
     return path
 
 
-def attention_decode(p, cfg: ModelConfig, x, pos, k_cache, v_cache, *,
+def attention_decode(p, cfg: ModelConfig, x, pos, cache, *,
                      window: int, mesh=None, block_table=None,
                      write_table=None):
     """Decode / chunked-prefill attention.  x: (B,C,D), pos: (B,C).
@@ -390,6 +391,14 @@ def attention_decode(p, cfg: ModelConfig, x, pos, k_cache, v_cache, *,
     C queries attend over the updated view with per-query causal (and
     window) masking — in-chunk causality falls out of the position mask.
 
+    ``cache`` is the layer's cache-entry dict: ``{"k", "v"}`` plus
+    ``{"k_scale", "v_scale"}`` under a quantized ``CachePolicy``
+    (int8/fp8 data with per-(position, kv-head) float32 scales — see
+    ``repro.models.quant``).  Quantized entries are quantized at write
+    time, so the same token content always produces the same block
+    bytes; reads dequantize the attended view (the Pallas paged path
+    fuses the dequant into the kernel).
+
     Contiguous (``block_table=None``): caches (B,Smax,KH,Dh); inserts
     this chunk's k/v at ``pos`` (per-batch scatter; positions beyond
     Smax — bucket padding — are dropped by the scatter) and attends over
@@ -397,36 +406,61 @@ def attention_decode(p, cfg: ModelConfig, x, pos, k_cache, v_cache, *,
     block_len,KH,Dh); inserts through ``write_table`` (defaults to
     ``block_table``; chunked admission points already-pooled shared
     prefix rows at the trash block) and attends over the gathered (or
-    Pallas block-table-indexed) view.  Returns (out, (k_cache, v_cache)).
+    Pallas block-table-indexed) view.  Returns (out, new_cache_dict).
     """
     B, C = x.shape[:2]
     q, k, v = attention_qkv(p, cfg, x, pos)
+    quantized = "k_scale" in cache
+    cache = dict(cache)
+    if quantized:
+        kv_dtype = quant.kv_dtype_of_leaf(cache["k"])
+        k_w, ks_w = quant.quantize(k, kv_dtype)
+        v_w, vs_w = quant.quantize(v, kv_dtype)
+    else:
+        k_w, v_w = k, v
     if block_table is None:
         bidx = jnp.arange(B)
-        k_cache = k_cache.at[bidx[:, None], pos].set(k.astype(k_cache.dtype))
-        v_cache = v_cache.at[bidx[:, None], pos].set(v.astype(v_cache.dtype))
-        kg, vg = k_cache, v_cache
+        idx = (bidx[:, None], pos)
+        cache["k"] = cache["k"].at[idx].set(k_w.astype(cache["k"].dtype))
+        cache["v"] = cache["v"].at[idx].set(v_w.astype(cache["v"].dtype))
+        if quantized:
+            cache["k_scale"] = cache["k_scale"].at[idx].set(ks_w)
+            cache["v_scale"] = cache["v_scale"].at[idx].set(vs_w)
+            kg = quant.dequantize(cache["k"], cache["k_scale"], x.dtype)
+            vg = quant.dequantize(cache["v"], cache["v_scale"], x.dtype)
+        else:
+            kg, vg = cache["k"], cache["v"]
     else:
         wt = block_table if write_table is None else write_table
-        k_cache = paged_insert(k_cache, wt, pos, k)
-        v_cache = paged_insert(v_cache, wt, pos, v)
+        cache["k"] = paged_insert(cache["k"], wt, pos, k_w)
+        cache["v"] = paged_insert(cache["v"], wt, pos, v_w)
+        if quantized:
+            cache["k_scale"] = paged_insert(cache["k_scale"], wt, pos, ks_w)
+            cache["v_scale"] = paged_insert(cache["v_scale"], wt, pos, vs_w)
         if paged_read_path(cfg, C) == "pallas":
             # chunk positions are consecutive per slot (decode, chunked
             # prefill, and the speculative verify chunk all are), so the
             # kernel takes the first query's position and derives the rest
             from repro.kernels.paged_attn import ops as pa_ops
             out = pa_ops.paged_decode_attention(
-                q, k_cache, v_cache, block_table, pos[:, 0], window=window,
-                softcap=cfg.attn_logit_softcap)
-            return out.reshape(B, C, -1) @ p["wo"], (k_cache, v_cache)
-        kg = paged_gather(k_cache, block_table)
-        vg = paged_gather(v_cache, block_table)
+                q, cache["k"], cache["v"], block_table, pos[:, 0],
+                window=window, softcap=cfg.attn_logit_softcap,
+                k_scale=cache.get("k_scale"), v_scale=cache.get("v_scale"),
+                out_dtype=x.dtype if quantized else None)
+            return out.reshape(B, C, -1) @ p["wo"], cache
+        kg = paged_gather(cache["k"], block_table)
+        vg = paged_gather(cache["v"], block_table)
+        if quantized:
+            kg = quant.dequantize(
+                kg, paged_gather(cache["k_scale"], block_table), x.dtype)
+            vg = quant.dequantize(
+                vg, paged_gather(cache["v_scale"], block_table), x.dtype)
     Smax = kg.shape[1]
     k_pos = jnp.arange(Smax)[None, :].repeat(B, 0)
     out = decode_attention(q, kg, vg, pos, k_pos,
                            window=window, softcap=cfg.attn_logit_softcap,
                            mesh=mesh)
-    return out.reshape(B, C, -1) @ p["wo"], (k_cache, v_cache)
+    return out.reshape(B, C, -1) @ p["wo"], cache
 
 
 # ---------------------------------------------------------------------------
@@ -520,35 +554,59 @@ def _mla_attend(p, cfg: ModelConfig, x, pos, ckv, krope, mesh):
     return v.reshape(B, C, H * vd).astype(x.dtype) @ p["wo"]
 
 
-def mla_decode(p, cfg: ModelConfig, x, pos, ckv_cache, krope_cache,
+def mla_decode(p, cfg: ModelConfig, x, pos, cache,
                mesh=None, block_table=None, write_table=None):
     """Absorbed-matrix MLA decode: attends directly in the latent space.
 
     The 576-float/token latent cache is what makes DeepSeek-V3 long-context
-    decode feasible (long_500k).  Inserts this chunk's latents (x (B,C,D)
-    at pos (B,C); C=1 is plain decode), attends, and returns
-    (out, (ckv_cache, krope_cache)).  With ``block_table`` the caches are
-    block pools and the attended view is the gathered one; ``write_table``
-    (chunked admission) diverts already-pooled shared prefix writes.
+    decode feasible (long_500k).  ``cache`` is the layer's cache-entry
+    dict: ``{"ckv", "kr"}`` plus ``{"ckv_scale", "kr_scale"}`` under a
+    quantized policy (per-position scales over the latent/rope feature
+    axis).  Inserts this chunk's latents (x (B,C,D) at pos (B,C); C=1 is
+    plain decode), attends, and returns (out, new_cache_dict).  With
+    ``block_table`` the caches are block pools and the attended view is
+    the gathered one; ``write_table`` (chunked admission) diverts
+    already-pooled shared prefix writes.
     """
     B = x.shape[0]
     ckv_t, krope_t = mla_latent(p, cfg, x, pos)
+    quantized = "ckv_scale" in cache
+    cache = dict(cache)
+    if quantized:
+        kv_dtype = quant.kv_dtype_of_leaf(cache["ckv"])
+        ckv_w, cs_w = quant.quantize(ckv_t, kv_dtype)
+        kr_w, krs_w = quant.quantize(krope_t, kv_dtype)
+    else:
+        ckv_w, kr_w = ckv_t, krope_t
     if block_table is None:
         bidx = jnp.arange(B)
-        ckv_cache = ckv_cache.at[bidx[:, None], pos].set(
-            ckv_t.astype(ckv_cache.dtype))
-        krope_cache = krope_cache.at[bidx[:, None], pos].set(
-            krope_t.astype(krope_cache.dtype))
-        ckv_g, krope_g = ckv_cache, krope_cache
+        idx = (bidx[:, None], pos)
+        cache["ckv"] = cache["ckv"].at[idx].set(ckv_w.astype(cache["ckv"].dtype))
+        cache["kr"] = cache["kr"].at[idx].set(kr_w.astype(cache["kr"].dtype))
+        if quantized:
+            cache["ckv_scale"] = cache["ckv_scale"].at[idx].set(cs_w)
+            cache["kr_scale"] = cache["kr_scale"].at[idx].set(krs_w)
+            ckv_g = quant.dequantize(cache["ckv"], cache["ckv_scale"], x.dtype)
+            krope_g = quant.dequantize(cache["kr"], cache["kr_scale"], x.dtype)
+        else:
+            ckv_g, krope_g = cache["ckv"], cache["kr"]
     else:
         wt = block_table if write_table is None else write_table
-        ckv_cache = paged_insert(ckv_cache, wt, pos, ckv_t)
-        krope_cache = paged_insert(krope_cache, wt, pos, krope_t)
+        cache["ckv"] = paged_insert(cache["ckv"], wt, pos, ckv_w)
+        cache["kr"] = paged_insert(cache["kr"], wt, pos, kr_w)
+        if quantized:
+            cache["ckv_scale"] = paged_insert(cache["ckv_scale"], wt, pos, cs_w)
+            cache["kr_scale"] = paged_insert(cache["kr_scale"], wt, pos, krs_w)
         paged_read_path(cfg, x.shape[1], attn="mla")
-        ckv_g = paged_gather(ckv_cache, block_table)
-        krope_g = paged_gather(krope_cache, block_table)
+        ckv_g = paged_gather(cache["ckv"], block_table)
+        krope_g = paged_gather(cache["kr"], block_table)
+        if quantized:
+            ckv_g = quant.dequantize(
+                ckv_g, paged_gather(cache["ckv_scale"], block_table), x.dtype)
+            krope_g = quant.dequantize(
+                krope_g, paged_gather(cache["kr_scale"], block_table), x.dtype)
     out = _mla_attend(p, cfg, x, pos, ckv_g, krope_g, mesh)
-    return out, (ckv_cache, krope_cache)
+    return out, cache
 
 
 # ---------------------------------------------------------------------------

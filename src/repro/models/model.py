@@ -25,7 +25,7 @@ import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.models.config import ModelConfig
-from repro.models import layers, moe, ssm
+from repro.models import layers, moe, quant, ssm
 
 
 # ---------------------------------------------------------------------------
@@ -143,17 +143,14 @@ def _block_decode(p, cfg: ModelConfig, x, pos, cache, *, kind: str, mesh,
     window = _window_for(cfg, kind)
     h = layers.apply_norm(p["ln1"], x)
     if cfg.attn_type == "mla":
-        attn_out, (ckv, kr) = layers.mla_decode(p["attn"], cfg, h, pos,
-                                                cache["ckv"], cache["kr"],
+        attn_out, new_cache = layers.mla_decode(p["attn"], cfg, h, pos, cache,
                                                 mesh=mesh,
                                                 block_table=block_tables,
                                                 write_table=write_tables)
-        new_cache = {"ckv": ckv, "kr": kr}
     else:
-        attn_out, (kc, vc) = layers.attention_decode(
-            p["attn"], cfg, h, pos, cache["k"], cache["v"], window=window,
+        attn_out, new_cache = layers.attention_decode(
+            p["attn"], cfg, h, pos, cache, window=window,
             mesh=mesh, block_table=block_tables, write_table=write_tables)
-        new_cache = {"k": kc, "v": vc}
     if cfg.post_block_norm:
         attn_out = layers.apply_norm(p["ln1_post"], attn_out)
     x = x + attn_out
@@ -171,13 +168,28 @@ def _block_decode(p, cfg: ModelConfig, x, pos, cache, *, kind: str, mesh,
     return x, new_cache
 
 
-def _attn_cache_struct(cfg: ModelConfig, B: int, S: int, dtype):
+def _attn_cache_struct(cfg: ModelConfig, B: int, S: int, dtype, policy=None):
+    """One attention layer's KV cache entry.
+
+    Under a quantized ``CachePolicy`` each KV leaf is stored at the
+    policy's dtype with a float32 ``<leaf>_scale`` sibling of the leaf's
+    shape minus its trailing feature axis (one scale per written row /
+    kv-head) — see ``repro.models.quant``.
+    """
+    pol = policy or quant.CachePolicy()
+    sd = pol.storage_dtype(dtype)
     if cfg.attn_type == "mla":
-        return {"ckv": jnp.zeros((B, S, cfg.kv_lora_rank), dtype),
-                "kr": jnp.zeros((B, S, cfg.rope_head_dim), dtype)}
-    KH, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
-    return {"k": jnp.zeros((B, S, KH, Dh), dtype),
-            "v": jnp.zeros((B, S, KH, Dh), dtype)}
+        c = {"ckv": jnp.zeros((B, S, cfg.kv_lora_rank), sd),
+             "kr": jnp.zeros((B, S, cfg.rope_head_dim), sd)}
+    else:
+        KH, Dh = cfg.n_kv_heads, cfg.resolved_head_dim
+        c = {"k": jnp.zeros((B, S, KH, Dh), sd),
+             "v": jnp.zeros((B, S, KH, Dh), sd)}
+    if pol.quantized:
+        for key in list(c):
+            c[quant.scale_name(key)] = jnp.zeros(c[key].shape[:-1],
+                                                 jnp.float32)
+    return c
 
 
 # ===========================================================================
@@ -703,8 +715,16 @@ def _place_tree(tree, mesh, spec_tree):
         tree, spec_tree)
 
 
-def init_decode_cache(cfg: ModelConfig, B: int, S: int, mesh=None):
+def init_decode_cache(cfg: ModelConfig, B: int, S: int, mesh=None,
+                      policy=None):
     """Zeroed cache pytree for ``decode_step`` (capacity S).
+
+    ``policy`` (a ``quant.CachePolicy``) names the storage dtype of the
+    SELF-attention KV leaves; quantized policies add per-row float32
+    ``_scale`` siblings.  Recurrent state (ssm/hybrid), encdec cross KV
+    and encoder memory opt out — they are read linearly every step, so
+    quantizing them buys little and costs accuracy.  ``policy=None``
+    keeps the historical param-dtype layout bit-for-bit.
 
     With ``mesh`` the cache is laid out with ``NamedSharding`` per
     ``sharding.rules.cache_specs`` — slot (batch) axes over the data
@@ -715,12 +735,12 @@ def init_decode_cache(cfg: ModelConfig, B: int, S: int, mesh=None):
     at = cfg.arch_type
     if mesh is not None and mesh.size > 1:
         from repro.sharding import rules
-        tree = init_decode_cache(cfg, B, S)
+        tree = init_decode_cache(cfg, B, S, policy=policy)
         specs = rules.cache_specs(tree, mesh, batch=B, seq=S)
         return _place_tree(tree, mesh, specs)
 
     def attn_entry():
-        return _attn_cache_struct(cfg, B, S, dtype)
+        return _attn_cache_struct(cfg, B, S, dtype, policy)
 
     def stack(entry, n):
         return jax.tree.map(lambda x: jnp.broadcast_to(x, (n,) + x.shape), entry)
@@ -872,15 +892,17 @@ def prefill_into_cache(cfg: ModelConfig, decode_cache, prefill_cache):
     raise ValueError(at)
 
 
-def decode_cache_batch_axes(cfg: ModelConfig):
+def decode_cache_batch_axes(cfg: ModelConfig, policy=None):
     """Tree of the batch-axis index of every decode-cache leaf.
 
     The batch axis sits behind a varying number of stacked layer axes
     (e.g. hybrid mamba state is (groups, period, B, ...)); discover it by
-    diffing two abstract caches that differ only in B.
+    diffing two abstract caches that differ only in B.  ``policy`` must
+    match the cache being indexed — quantized policies add ``_scale``
+    leaves, and the axes tree must mirror that structure.
     """
-    a = jax.eval_shape(lambda: init_decode_cache(cfg, 2, 8))
-    b = jax.eval_shape(lambda: init_decode_cache(cfg, 3, 8))
+    a = jax.eval_shape(lambda: init_decode_cache(cfg, 2, 8, policy=policy))
+    b = jax.eval_shape(lambda: init_decode_cache(cfg, 3, 8, policy=policy))
 
     def axis(x, y):
         return next(i for i, (p, q) in enumerate(zip(x.shape, y.shape))
@@ -893,14 +915,14 @@ def decode_cache_batch_axes(cfg: ModelConfig):
 # serving: block-paged decode cache
 # ---------------------------------------------------------------------------
 
-def decode_cache_seq_axes(cfg: ModelConfig):
+def decode_cache_seq_axes(cfg: ModelConfig, policy=None):
     """Tree of the sequence-axis index of every decode-cache leaf, or -1
     for leaves with no growing sequence axis (ssm state/conv, encdec
     cross KV and encoder memory).  Discovered by diffing two abstract
     caches that differ only in S — the -1 leaves are exactly the ones
     that stay slot-resident under the paged layout."""
-    a = jax.eval_shape(lambda: init_decode_cache(cfg, 2, 8))
-    b = jax.eval_shape(lambda: init_decode_cache(cfg, 2, 16))
+    a = jax.eval_shape(lambda: init_decode_cache(cfg, 2, 8, policy=policy))
+    b = jax.eval_shape(lambda: init_decode_cache(cfg, 2, 16, policy=policy))
 
     def axis(x, y):
         diff = [i for i, (p, q) in enumerate(zip(x.shape, y.shape)) if p != q]
@@ -917,7 +939,7 @@ def has_paged_leaves(cfg: ModelConfig) -> bool:
 
 
 def init_paged_cache(cfg: ModelConfig, n_slots: int, n_blocks: int,
-                     block_len: int, mesh=None):
+                     block_len: int, mesh=None, policy=None):
     """Block-paged decode cache.
 
     Sequence-carrying leaves become per-leaf block pools: the contiguous
@@ -935,18 +957,49 @@ def init_paged_cache(cfg: ModelConfig, n_slots: int, n_blocks: int,
     dims shard over "model"; slot-resident leaves shard their slot axis
     over the data axes.  ``mesh=None`` / 1-device meshes are unchanged.
     """
-    pool = init_decode_cache(cfg, n_blocks, block_len)
-    slotted = init_decode_cache(cfg, n_slots, block_len)
-    seq = decode_cache_seq_axes(cfg)
+    pool = init_decode_cache(cfg, n_blocks, block_len, policy=policy)
+    slotted = init_decode_cache(cfg, n_slots, block_len, policy=policy)
+    seq = decode_cache_seq_axes(cfg, policy=policy)
     tree = jax.tree.map(lambda p, s, ax: p if ax >= 0 else s,
                         pool, slotted, seq)
     if mesh is not None and mesh.size > 1:
         from repro.sharding import rules
-        specs = rules.paged_cache_specs(tree, mesh,
-                                        batch_axes=decode_cache_batch_axes(cfg),
-                                        seq_axes=seq)
+        specs = rules.paged_cache_specs(
+            tree, mesh,
+            batch_axes=decode_cache_batch_axes(cfg, policy=policy),
+            seq_axes=seq)
         return _place_tree(tree, mesh, specs)
     return tree
+
+
+def match_cache_policy(template, sub):
+    """Re-structure a full-precision cache ``sub`` to the (possibly
+    quantized) ``template``'s policy: data leaves with a ``_scale``
+    sibling in the template are quantized along their trailing feature
+    axis (write-time scales); everything else passes through.  A
+    no-op (identity structure) for unquantized templates."""
+    pol = quant.policy_of(template)
+    if not pol.quantized:
+        return sub
+
+    def walk(tmpl, src):
+        if not isinstance(tmpl, dict):
+            return src
+        out = {}
+        for key, tval in tmpl.items():
+            if isinstance(key, str) and quant.is_scale_key(key):
+                continue
+            if isinstance(tval, dict):
+                out[key] = walk(tval, src[key])
+            elif isinstance(key, str) and quant.scale_name(key) in tmpl:
+                q, s = quant.quantize(src[key], pol.kv_dtype)
+                out[key] = q
+                out[quant.scale_name(key)] = s
+            else:
+                out[key] = src[key]
+        return out
+
+    return walk(template, sub)
 
 
 def scatter_prefill_paged(cfg: ModelConfig, paged_cache, sub, slot, ids,
@@ -957,9 +1010,16 @@ def scatter_prefill_paged(cfg: ModelConfig, paged_cache, sub, slot, ids,
     slot-resident leaves in batch row ``slot``.  ``mask`` (same shape as
     ``ids``) is False for blocks whose content is already pooled (prefix
     sharing) — their writes are diverted to the trash block 0 instead of
-    re-writing (identical) shared content."""
-    bat = decode_cache_batch_axes(cfg)
-    seq = decode_cache_seq_axes(cfg)
+    re-writing (identical) shared content.
+
+    ``sub`` is always the full-precision prefill graft; when the paged
+    cache is quantized, KV leaves are quantized here (per-row scales
+    computed at write time) so pool content is a pure function of the
+    written tokens — the invariant prefix sharing relies on."""
+    pol = quant.policy_of(paged_cache)
+    bat = decode_cache_batch_axes(cfg, policy=pol)
+    seq = decode_cache_seq_axes(cfg, policy=pol)
+    sub = match_cache_policy(paged_cache, sub)
     ids_eff = jnp.where(mask, ids, 0)
 
     def put(dst, src, bax, sax):
@@ -978,17 +1038,25 @@ def scatter_prefill_paged(cfg: ModelConfig, paged_cache, sub, slot, ids,
     return jax.tree.map(put, paged_cache, sub, bat, seq)
 
 
-def cache_nbytes(cfg: ModelConfig, B: int, S: int) -> int:
-    """Bytes of a contiguous (B, S) decode cache (abstract, no alloc)."""
-    tree = jax.eval_shape(lambda: init_decode_cache(cfg, B, S))
+def cache_nbytes(cfg: ModelConfig, B: int, S: int, policy=None) -> int:
+    """Bytes of a contiguous (B, S) decode cache (abstract, no alloc).
+
+    Summed per leaf at each leaf's OWN itemsize — under a quantized
+    policy the cache mixes int8/fp8 KV leaves with float32 scale (and
+    opted-out recurrent) leaves, so a single-itemsize estimate would
+    misprice every equal-bytes comparison."""
+    tree = jax.eval_shape(lambda: init_decode_cache(cfg, B, S,
+                                                    policy=policy))
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
 
 
 def paged_cache_nbytes(cfg: ModelConfig, n_slots: int, n_blocks: int,
-                       block_len: int) -> int:
-    """Bytes of the paged cache: block pools + slot-resident leaves."""
+                       block_len: int, policy=None) -> int:
+    """Bytes of the paged cache: block pools + slot-resident leaves,
+    summed per leaf at each leaf's own itemsize (see cache_nbytes)."""
     tree = jax.eval_shape(
-        lambda: init_paged_cache(cfg, n_slots, n_blocks, block_len))
+        lambda: init_paged_cache(cfg, n_slots, n_blocks, block_len,
+                                 policy=policy))
     return sum(l.size * l.dtype.itemsize for l in jax.tree.leaves(tree))
 
 
@@ -1025,7 +1093,7 @@ def _decode_step_overlapped(params, cfg: ModelConfig, cache, x, pos, *,
     """
     B = x.shape[0]
     half = B // 2
-    bat = decode_cache_batch_axes(cfg)
+    bat = decode_cache_batch_axes(cfg, policy=quant.policy_of(cache))
 
     def run(lo, hi):
         c = jax.tree.map(
@@ -1191,10 +1259,10 @@ def _encdec_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
     def body(x, inp):
         bp, sc, cc = inp
         h = layers.apply_norm(bp["ln1"], x)
-        a, (kc, vc) = layers.attention_decode(bp["attn"], cfg, h, pos,
-                                              sc["k"], sc["v"], window=0,
-                                              block_table=block_tables,
-                                              write_table=write_tables)
+        a, nsc = layers.attention_decode(bp["attn"], cfg, h, pos, sc,
+                                         window=0,
+                                         block_table=block_tables,
+                                         write_table=write_tables)
         x = x + a
         h = layers.apply_norm(bp["ln_x"], x)
         q, _, _ = layers.attention_qkv(bp["xattn"], cfg, h, pos)
@@ -1205,7 +1273,7 @@ def _encdec_decode(params, cfg: ModelConfig, x, pos, cache, *, mesh,
         x = x + xa.reshape(B, C, -1) @ bp["xattn"]["wo"]
         h = layers.apply_norm(bp["ln2"], x)
         x = x + layers.apply_mlp(bp["mlp"], cfg, h)
-        return x, {"k": kc, "v": vc}
+        return x, nsc
 
     x, nsc = _scan(cfg, body, x, (params["dec_blocks"], cache["self"],
                                   cache["cross"]))
@@ -1282,7 +1350,7 @@ def prefill_chunked(params, cfg: ModelConfig, cache, batch, prompt_len, *,
         raise ValueError(
             f"padded input length {S_total} (offset {offset} + tokens "
             f"{T_pad}) must be a multiple of chunk_len {chunk_len}")
-    seq = decode_cache_seq_axes(cfg)
+    seq = decode_cache_seq_axes(cfg, policy=quant.policy_of(cache))
     cache = jax.tree.map(
         lambda leaf, ax: jnp.zeros_like(leaf) if ax < 0 else leaf, cache, seq)
     if at == "encdec":
@@ -1388,8 +1456,9 @@ def _spec_zero_rejected(cfg: ModelConfig, cache, pos, a, *, k: int,
     jj = jnp.arange(k + 1)
     rej = jj[None, :] >= a[:, None]                      # (B, k+1)
     tgt = pos[:, None] + jj[None, :]                     # (B, k+1)
-    bat = decode_cache_batch_axes(cfg)
-    seq = decode_cache_seq_axes(cfg)
+    pol = quant.policy_of(cache)
+    bat = decode_cache_batch_axes(cfg, policy=pol)
+    seq = decode_cache_seq_axes(cfg, policy=pol)
     bidx = jnp.arange(B)[:, None]
 
     def zero_leaf(leaf, bax, sax):

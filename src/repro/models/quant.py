@@ -1,0 +1,217 @@
+"""Storage dtype policies for decode caches and optimizer moments.
+
+A ``CachePolicy`` names the storage dtype of the attention KV leaves in
+a decode cache (contiguous or paged).  Quantized policies (int8 / fp8)
+store each KV row with a per-(position, kv-head) float32 scale computed
+at WRITE time — amax over the leaf's trailing feature axis — so every
+row dequantizes as ``q.astype(f32) * scale``.  The scale rides the
+cache as a sibling leaf keyed ``<leaf>_scale`` (e.g. ``k`` ->
+``k_scale``): structure carries policy, so compiled functions retrace
+per pytree structure and never need an explicit policy key, and
+``policy_of`` recovers the policy from any cache at runtime.
+
+Scales are per-position (not per-block): a block's bytes are then a
+pure function of its token content, which keeps the paged allocator's
+content-keyed prefix sharing sound — re-writing the same tokens
+produces bit-identical blocks regardless of write order.
+
+``bf16`` / ``fp32`` policies are *transparent*: they change only the
+leaf dtype (every write path already ``.astype``s into the cache
+dtype) and add no scale leaves.  ``""`` (default) keeps the param
+dtype — byte-for-byte the historical layout.
+
+``MomentPolicy`` is the optimizer-state analogue (see
+``repro.optim.adamw``): first/second AdamW moments in bf16, or the
+second moment in int8 with one per-tensor float32 scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# symmetric quantization ranges: int8 uses the full signed byte minus
+# the asymmetric -128; fp8 e4m3 (no infinities) saturates at +-448
+QMAX = {"int8": 127.0, "fp8": 448.0}
+KV_DTYPES = ("", "fp32", "bf16", "fp8", "int8")
+_STORAGE = {"fp32": jnp.float32, "bf16": jnp.bfloat16, "int8": jnp.int8}
+# guard against zero rows: amax 0 would make scale 0 and dequant NaN-free
+# but division at quantize time 0/0
+_EPS = 1e-12
+
+
+def _fp8_dtype():
+    return jnp.float8_e4m3fn
+
+
+@dataclasses.dataclass(frozen=True)
+class CachePolicy:
+    """KV-cache storage policy.  ``kv_dtype`` in ``KV_DTYPES``."""
+    kv_dtype: str = ""
+
+    def __post_init__(self):
+        if self.kv_dtype not in KV_DTYPES:
+            raise ValueError(
+                f"kv_dtype {self.kv_dtype!r} not in {KV_DTYPES}")
+
+    @property
+    def quantized(self) -> bool:
+        return self.kv_dtype in ("int8", "fp8")
+
+    @property
+    def qmax(self) -> float:
+        return QMAX[self.kv_dtype]
+
+    def storage_dtype(self, param_dtype):
+        """The dtype KV leaves are allocated at (param dtype when '')."""
+        if not self.kv_dtype:
+            return jnp.dtype(param_dtype)
+        if self.kv_dtype == "fp8":
+            return jnp.dtype(_fp8_dtype())
+        return jnp.dtype(_STORAGE[self.kv_dtype])
+
+
+def quantize(x, kv_dtype: str) -> Tuple[jax.Array, jax.Array]:
+    """Quantize ``x`` along its LAST axis.
+
+    Returns ``(q, scale)`` with ``q.shape == x.shape`` at the storage
+    dtype and ``scale.shape == x.shape[:-1]`` in float32, such that
+    ``dequantize(q, scale) ~= x`` with per-row relative error bounded
+    by ~1/(2*qmax) for int8 and fp8's 3 mantissa bits for fp8.
+    """
+    xf = x.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.maximum(amax, _EPS) / QMAX[kv_dtype]
+    q = xf / scale[..., None]
+    if kv_dtype == "int8":
+        q = jnp.clip(jnp.round(q), -127.0, 127.0).astype(jnp.int8)
+    else:
+        q = jnp.clip(q, -448.0, 448.0).astype(_fp8_dtype())
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize(q, scale, dtype=jnp.float32):
+    """Inverse of ``quantize``: per-row rescale back to ``dtype``."""
+    return (q.astype(jnp.float32) * scale[..., None].astype(jnp.float32)
+            ).astype(dtype)
+
+
+def kv_dtype_of_leaf(leaf) -> str:
+    """The quantized policy a DATA leaf's dtype implies ('' if none)."""
+    if leaf.dtype == jnp.int8:
+        return "int8"
+    if leaf.dtype == jnp.dtype(_fp8_dtype()):
+        return "fp8"
+    return ""
+
+
+def policy_of(cache) -> CachePolicy:
+    """Recover the CachePolicy from a cache's structure.
+
+    Quantized caches carry ``<leaf>_scale`` siblings; the paired data
+    leaf's dtype names the policy.  Caches without scale leaves map to
+    the transparent default policy (which also covers bf16/fp32 —
+    their runtime behavior is dtype-generic ``.astype``).
+    """
+    for path, leaf in jax.tree_util.tree_flatten_with_path(cache)[0]:
+        last = path[-1]
+        key = getattr(last, "key", None)
+        if isinstance(key, str) and key.endswith("_scale"):
+            kv = kv_dtype_of_leaf(_sibling(cache, path, key[:-len("_scale")]))
+            if kv:
+                return CachePolicy(kv)
+    return CachePolicy()
+
+
+def _sibling(cache, path, name: str):
+    """The leaf at ``path`` with its final dict key replaced by ``name``."""
+    node = cache
+    for entry in path[:-1]:
+        node = node[entry.key] if hasattr(entry, "key") else node[entry.idx]
+    return node[name]
+
+
+def is_scale_key(key: str) -> bool:
+    return key.endswith("_scale")
+
+
+def scale_name(key: str) -> str:
+    return key + "_scale"
+
+
+# ---------------------------------------------------------------------------
+# optimizer-state policy (used by repro.optim.adamw)
+# ---------------------------------------------------------------------------
+
+MOMENT_DTYPES = ("", "fp32", "bf16", "int8")
+
+
+@dataclasses.dataclass(frozen=True)
+class MomentPolicy:
+    """AdamW moment storage policy.
+
+    ``m_dtype`` applies to the first moment (bf16 halves it; int8 is
+    not offered — sign-sensitive EMA of gradients degrades too fast).
+    ``v_dtype`` applies to the second moment; ``int8`` stores v with
+    ONE per-tensor float32 scale leaf (v is non-negative and smooth,
+    so a per-tensor amax EMA-free snapshot round-trips within the
+    Adam epsilon for the fleet's training horizons).
+    """
+    m_dtype: str = ""
+    v_dtype: str = ""
+
+    def __post_init__(self):
+        if self.m_dtype not in ("", "fp32", "bf16"):
+            raise ValueError(f"m_dtype {self.m_dtype!r} invalid")
+        if self.v_dtype not in MOMENT_DTYPES:
+            raise ValueError(f"v_dtype {self.v_dtype!r} invalid")
+
+    @property
+    def v_quantized(self) -> bool:
+        return self.v_dtype == "int8"
+
+    def m_storage(self):
+        return {"": jnp.float32, "fp32": jnp.float32,
+                "bf16": jnp.bfloat16}[self.m_dtype or ""]
+
+    def v_storage(self):
+        if self.v_dtype == "int8":
+            return jnp.int8
+        return {"": jnp.float32, "fp32": jnp.float32,
+                "bf16": jnp.bfloat16}[self.v_dtype or ""]
+
+
+# log-level span of the int8 v codebook: level 1 sits 6 decades of
+# sqrt(v) below the per-tensor amax (level 127); ~11% relative
+# resolution per level on sqrt(v) — the quantity the Adam update
+# consumes.  Linear levels would round small v entries to 0 and turn
+# ``m / (sqrt(v) + eps)`` into a giant sign-SGD step.
+_V_ALPHA = 13.815511  # ln(1e6)
+
+
+def quantize_v(v_f32):
+    """Per-tensor int8 quantization of a (non-negative) second moment.
+
+    Codes are **log-spaced in the sqrt domain**: code q > 0 decodes to
+    ``scale * exp(_V_ALPHA * (q - 127) / 127)`` of sqrt(v) (code 127 =
+    the tensor's amax, code 1 ≈ amax * 1e-6); code 0 is exact zero, so
+    freshly-initialized state round-trips bit-exact.  Entries below the
+    codebook floor saturate UP to code 1 — overestimating tiny v
+    underestimates the step, which is conservative and stable, unlike a
+    zero floor feeding ``eps`` into the denominator.  Returns
+    ``(q, scale)`` with scalar float32 ``scale``.
+    """
+    r = jnp.sqrt(v_f32)
+    scale = jnp.maximum(jnp.max(r), _EPS)
+    lvl = 127.0 + jnp.log(jnp.maximum(r, _EPS) / scale) * (127.0 / _V_ALPHA)
+    q = jnp.clip(jnp.round(lvl), 1.0, 127.0)
+    q = jnp.where(r > 0, q, 0.0).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def dequantize_v(q, scale):
+    qf = q.astype(jnp.float32)
+    r = scale.astype(jnp.float32) * jnp.exp(_V_ALPHA * (qf - 127.0) / 127.0)
+    return jnp.where(q > 0, jnp.square(r), 0.0)

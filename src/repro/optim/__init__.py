@@ -1,7 +1,9 @@
-from repro.optim.adamw import adamw_init, adamw_update, global_norm_clip
+from repro.optim.adamw import adamw_init, adamw_update, global_norm_clip, \
+    resolve_moment_policy
 from repro.optim.schedule import cosine_schedule, linear_schedule, constant_schedule
 from repro.optim.loops import scan_epoch
 
 __all__ = ["adamw_init", "adamw_update", "global_norm_clip",
+           "resolve_moment_policy",
            "cosine_schedule", "linear_schedule", "constant_schedule",
            "scan_epoch"]

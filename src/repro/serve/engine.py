@@ -54,6 +54,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.models import model as M
+from repro.models import quant
 from repro.models.config import ModelConfig
 from repro.serve import bucketing as bk
 from repro.serve import paged as pg
@@ -171,7 +172,7 @@ class ServeEngine:
                  seg_len: int = 8, mesh=None, seed: int = 0,
                  history_limit: int = 4096, compile_cache_size: int = 32,
                  chunk_len: Optional[int] = None, buckets=None,
-                 speculate: int = 0):
+                 speculate: int = 0, kv_dtype: str = ""):
         cfg.validate()
         if cfg.is_moe and not cfg.moe_dropless:
             # capacity drops are a training-time tradeoff; serving must
@@ -184,6 +185,10 @@ class ServeEngine:
                 "speculate requires an MTP head: cfg.n_mtp > 0 with "
                 "params['mtp'] (dense/moe/vlm families)")
         self.params, self.cfg = params, cfg
+        # cache storage policy: "" keeps the param dtype; int8/fp8 store
+        # KV quantized with per-position scale leaves (repro.models.quant)
+        self.kv_dtype = kv_dtype
+        self.policy = quant.CachePolicy(kv_dtype)
         self.n_slots, self.max_len, self.seg_len = n_slots, max_len, seg_len
         self.sampler = sampler if sampler is not None else Greedy()
         self.eos_id, self.mesh = eos_id, mesh
@@ -241,7 +246,7 @@ class ServeEngine:
 
     def _init_cache(self) -> None:
         self.cache = M.init_decode_cache(self.cfg, self.n_slots, self.max_len,
-                                         mesh=self.mesh)
+                                         mesh=self.mesh, policy=self.policy)
         self._cache_shardings = self._shardings_of(self.cache)
 
     def _shardings_of(self, cache):
@@ -279,11 +284,14 @@ class ServeEngine:
         if self.chunk_len is not None:
             return self._build_admit_chunked(key)
         cfg, max_len = self.cfg, self.max_len
-        axes = M.decode_cache_batch_axes(cfg)
+        axes = M.decode_cache_batch_axes(cfg, policy=self.policy)
 
         def admit(cache, pc, slot):
             sub = M.prefill_into_cache(
                 cfg, M.init_decode_cache(cfg, 1, max_len), pc)
+            # quantized engines graft full-precision, then quantize the
+            # whole slot row to the cache's policy (adds scale leaves)
+            sub = M.match_cache_policy(cache, sub)
             return self._constrain_cache(_scatter_slot_row(cache, sub, slot,
                                                            axes))
 
@@ -291,7 +299,7 @@ class ServeEngine:
 
     def _build_admit_chunked(self, rung: int):
         cfg, mesh, C = self.cfg, self.mesh, self.chunk_len
-        axes = M.decode_cache_batch_axes(cfg)
+        axes = M.decode_cache_batch_axes(cfg, policy=self.policy)
 
         def admit(params, cache, batch, prompt_len, slot):
             s1 = jnp.reshape(slot, (1,))
@@ -621,7 +629,8 @@ class PagedServeEngine(ServeEngine):
 
     def _init_cache(self) -> None:
         self.cache = M.init_paged_cache(self.cfg, self.n_slots, self.n_blocks,
-                                        self.block_len, mesh=self.mesh)
+                                        self.block_len, mesh=self.mesh,
+                                        policy=self.policy)
         self._cache_shardings = self._shardings_of(self.cache)
 
     def _build_admit(self, key):
@@ -647,8 +656,8 @@ class PagedServeEngine(ServeEngine):
         rows to the trash block so chunked re-computation can never
         perturb content other requests are reading."""
         cfg, mesh, C = self.cfg, self.mesh, self.chunk_len
-        bat = M.decode_cache_batch_axes(cfg)
-        seq = M.decode_cache_seq_axes(cfg)
+        bat = M.decode_cache_batch_axes(cfg, policy=self.policy)
+        seq = M.decode_cache_seq_axes(cfg, policy=self.policy)
 
         def admit(params, cache, batch, prompt_len, slot, read_tbl,
                   write_tbl):
@@ -698,7 +707,8 @@ class PagedServeEngine(ServeEngine):
         n_pb = -(-pos0 // bl)
         if req.plan_keys is None:
             req.plan_keys = (pg.prefix_keys(req.batch, pos0 // bl, bl,
-                                            M.decode_offset(self.cfg))
+                                            M.decode_offset(self.cfg),
+                                            policy=self.kv_dtype)
                              if self.share_prefix else [])
         keys = req.plan_keys
         # lazy admission claims only the prompt's blocks; the rest are

@@ -143,7 +143,8 @@ def prompt_digest(batch) -> bytes:
     return hashlib.sha1(b"".join(extra)).digest()
 
 
-def prefix_keys(batch, n_full_blocks: int, block_len: int, offset: int):
+def prefix_keys(batch, n_full_blocks: int, block_len: int, offset: int,
+                policy: str = ""):
     """Content keys for the full blocks below the write frontier.
 
     Block ``i`` covers positions [i*bl, (i+1)*bl); with a modality
@@ -152,6 +153,12 @@ def prefix_keys(batch, n_full_blocks: int, block_len: int, offset: int):
     (modality inputs, tokens[: (i+1)*bl - offset]).  The block index is
     part of the key: frontend-only blocks of different depths share a
     (possibly empty) token prefix but hold different rows.
+
+    ``policy`` is the cache's storage policy (``CachePolicy.kv_dtype``):
+    block bytes written under different policies differ for the same
+    tokens, so the policy salts the key — a quantized pool can never
+    alias blocks written under a different dtype (e.g. a
+    ``--check-unquantized`` replay sharing one allocator).
 
     Note: two prompts of *different total length* sharing a token prefix
     get the same keys — their shared-block KV is mathematically
@@ -165,5 +172,6 @@ def prefix_keys(batch, n_full_blocks: int, block_len: int, offset: int):
     keys = []
     for i in range(n_full_blocks):
         n_tok = max((i + 1) * block_len - offset, 0)
-        keys.append((i, base, toks[:n_tok].astype(np.int64).tobytes()))
+        keys.append((i, base, toks[:n_tok].astype(np.int64).tobytes(),
+                     policy))
     return keys

@@ -132,10 +132,18 @@ def param_specs(params, mesh: Mesh, *, fsdp: bool = True,
     return jax.tree_util.tree_unflatten(treedef, specs)
 
 
-def opt_state_specs(params, mesh: Mesh, *, fsdp: bool = True):
-    """Specs for AdamW state {m, v, step}: moments follow the params."""
+def opt_state_specs(params, mesh: Mesh, *, fsdp: bool = True,
+                    state=None):
+    """Specs for AdamW state {m, v, step}: moments follow the params.
+
+    Pass the actual ``state`` to cover quantized moment policies — an
+    int8-v state carries a ``"v_scale"`` tree of scalar per-tensor
+    scales, which replicate."""
     ps = param_specs(params, mesh, fsdp=fsdp)
-    return {"m": ps, "v": ps, "step": P()}
+    specs = {"m": ps, "v": ps, "step": P()}
+    if state is not None and "v_scale" in state:
+        specs["v_scale"] = jax.tree.map(lambda _: P(), state["v_scale"])
+    return specs
 
 
 def batch_spec(batch, mesh: Mesh):
