@@ -30,8 +30,9 @@ BENCH_FILES = ("BENCH_serve.json", "BENCH_fleet.json")
 # only; its regressions surface through the speedup ratios computed
 # in-run.
 HIGHER_KEYS = ("speedup", "concurrency_gain", "compile_reduction",
-               "acceptance_rate", "devices_per_host")
-LOWER_KEYS = ("compiles", "cache_bytes", "opt_bytes")
+               "acceptance_rate", "devices_per_host", "participation_rate")
+LOWER_KEYS = ("compiles", "cache_bytes", "opt_bytes",
+              "stale_merge_overhead")
 INFO_KEYS = ("tok_s",)
 
 

@@ -225,8 +225,15 @@ def fleet_scaling_bench(sizes=(8, 32, 64), *, seed: int = 0, log=print):
         "opt_state": fleet_opt_state_column(log=log),
     }
     out = os.path.join(os.path.dirname(__file__), "..", "BENCH_fleet.json")
+    # read-modify-write: BENCH_fleet.json is shared with the fleet_async
+    # bench — only replace this bench's keys, never other rows
+    existing = {}
+    if os.path.exists(out):
+        with open(out) as f:
+            existing = json.load(f)
+    existing.update(payload)
     with open(out, "w") as f:
-        json.dump(payload, f, indent=1)
+        json.dump(existing, f, indent=1)
     return results
 
 

@@ -366,6 +366,31 @@ def fleet_scaling(sizes=(8, 32, 64)):
          f"{col['opt_bytes_int8']}/{col['opt_bytes_fp32']}")
 
 
+def fleet_async():
+    """Async participation rounds vs one-shot sync, plus the multi-host
+    resident-state scaling column.  Merges into BENCH_fleet.json (runs
+    in a 4-fake-host child process, see benchmarks/fleet_async.py)."""
+    from benchmarks.fleet_async import fleet_async_bench
+    row = fleet_async_bench(log=_quiet)
+    modes = row["modes"]
+    for name in ("sync", "async_ideal", "async_stragglers"):
+        r = modes[name]
+        emit(f"fleet_async/{name}", r["wall_s"] * 1e6,
+             f"participation={r.get('participation_rate', 1.0)}")
+    emit("fleet_async/devices_per_host_scaling", 0.0,
+         f"{row['devices_per_host_scaling']}x")
+    for name in ("async_ideal", "async_stragglers"):
+        r = modes[name]
+        print(f"SUMMARY fleet_async mode={name} "
+              f"rounds_per_s={r['rounds_per_s']} "
+              f"participation={r['participation_rate']} "
+              f"staleness_p95={r.get('staleness_p95', 0.0)}", flush=True)
+    print(f"SUMMARY fleet_async stale_merge_overhead="
+          f"{modes['async_ideal']['stale_merge_overhead']}x "
+          f"devices_per_host_scaling={row['devices_per_host_scaling']}x",
+          flush=True)
+
+
 ALL_BENCHES = {
     "table1_perplexity": table1_perplexity,
     "table2_accuracy": table2_accuracy,
@@ -376,6 +401,7 @@ ALL_BENCHES = {
     "kernel_micro": kernel_micro,
     "kernel_moe_dispatch": kernel_moe_dispatch,
     "fleet_scaling": fleet_scaling,
+    "fleet_async": fleet_async,
     "serving": serving,
     "serving_paged": serving_paged,
     "serving_quantized": serving_quantized,

@@ -59,12 +59,19 @@ class FederatedCorpus:
                                                      step))
 
     def device_batches(self, device: int, steps: int, batch: int,
-                       seq_len: int) -> Dict:
+                       seq_len: int, start: int = 0) -> Dict:
         """Pre-generates a full local-training epoch for one device as
         stacked ``(steps, B, S)`` arrays.  Step ``s`` equals
-        ``device_batch(device, batch, seq_len, step=s)`` exactly, so the
-        scan drivers reproduce the per-step loop bit-for-bit."""
-        toks = np.stack([self._device_tokens(device, batch, seq_len, step=s)
+        ``device_batch(device, batch, seq_len, step=start + s)`` exactly,
+        so the scan drivers reproduce the per-step loop bit-for-bit.
+
+        ``start`` resumes the stream mid-epoch: the async fleet driver
+        feeds each round the slice ``[local_step, local_step + k)`` of a
+        device's stream, and because every step is keyed on
+        ``(corpus seed, device, step)`` alone, a device that sat out a
+        round consumes the *identical* continuation when it rejoins."""
+        toks = np.stack([self._device_tokens(device, batch, seq_len,
+                                             step=start + s)
                          for s in range(steps)])
         return batch_from_tokens(toks)
 

@@ -1,8 +1,16 @@
-from repro.federated.device import (DeviceSpec, device_upload_bytes,
-                                    train_device, train_fleet)
-from repro.federated.server import DeepFusionServer, ServerConfig
-from repro.federated.simulation import SimulationConfig, run_deepfusion
+from repro.federated.async_fleet import train_fleet_async
+from repro.federated.device import (STRAGGLER_PROFILES, DeviceSpec,
+                                    TrafficModel, device_upload_bytes,
+                                    sample_traffic, train_device, train_fleet)
+from repro.federated.server import (AsyncFleetConfig, DeepFusionServer,
+                                    FleetAggregator, ServerConfig,
+                                    staleness_weight)
+from repro.federated.simulation import (SimulationConfig, build_fleet,
+                                        run_deepfusion)
 
-__all__ = ["DeviceSpec", "train_device", "train_fleet",
-           "device_upload_bytes", "DeepFusionServer", "ServerConfig",
-           "SimulationConfig", "run_deepfusion"]
+__all__ = ["DeviceSpec", "TrafficModel", "STRAGGLER_PROFILES",
+           "sample_traffic", "train_device", "train_fleet",
+           "train_fleet_async", "device_upload_bytes", "DeepFusionServer",
+           "ServerConfig", "AsyncFleetConfig", "FleetAggregator",
+           "staleness_weight", "SimulationConfig", "build_fleet",
+           "run_deepfusion"]

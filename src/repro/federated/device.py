@@ -37,6 +37,37 @@ from repro.optim import adamw_init, adamw_update, cosine_schedule, scan_epoch
 from repro.utils.pytree import tree_bytes
 
 
+@dataclasses.dataclass(frozen=True)
+class TrafficModel:
+    """Seeded per-round traffic behaviour of one simulated edge device.
+
+    Report latency is lognormal (``median_latency_s`` scaled by
+    ``exp(sigma * N(0,1))`` — the long straggler tail real fleets show),
+    each round the device is offline with probability ``dropout_p``, and
+    ``avail_period``/``avail_duty`` model a battery / charging window:
+    the device is only reachable during the first ``avail_duty`` rounds
+    of every ``avail_period`` (0 = always available).  All draws are
+    pure functions of ``(seed, device_id, round)`` — see
+    ``sample_traffic`` — so fleet simulations replay bit-identically and
+    a device's behaviour never depends on what the rest of the fleet did.
+    """
+    median_latency_s: float = 1.0
+    latency_sigma: float = 0.5
+    dropout_p: float = 0.0
+    avail_period: int = 0
+    avail_duty: int = 0
+
+
+# named presets for --straggler-profile and the benchmarks
+STRAGGLER_PROFILES = {
+    "none": TrafficModel(),
+    "mild": TrafficModel(median_latency_s=1.0, latency_sigma=0.5,
+                         dropout_p=0.1),
+    "harsh": TrafficModel(median_latency_s=1.5, latency_sigma=1.0,
+                          dropout_p=0.3, avail_period=8, avail_duty=6),
+}
+
+
 @dataclasses.dataclass
 class DeviceSpec:
     device_id: int
@@ -46,10 +77,29 @@ class DeviceSpec:
     # full-size variant of ``cfg`` when the simulation trains a reduced
     # CPU stand-in; comm-cost accounting (Fig. 8) bills this one.
     full_cfg: Optional[ModelConfig] = None
+    # straggler/dropout behaviour for async rounds (None = ideal link)
+    traffic: Optional[TrafficModel] = None
 
     @property
     def comm_cfg(self) -> ModelConfig:
         return self.full_cfg or self.cfg
+
+
+def sample_traffic(spec: DeviceSpec, round_idx: int, seed: int):
+    """Deterministic ``(latency_s, online)`` draw for (device, round).
+
+    Keyed on ``(seed, device_id, round)`` only — independent of fleet
+    history, so a device that dropped out rejoins with the identical
+    latency/dropout stream it would always have had."""
+    tm = spec.traffic or TrafficModel()
+    if tm.avail_period and (round_idx % tm.avail_period) >= tm.avail_duty:
+        return 0.0, False
+    rng = np.random.default_rng(
+        (seed, 7_700_000 + spec.device_id, round_idx))
+    dropped = bool(rng.random() < tm.dropout_p)
+    latency = float(tm.median_latency_s * np.exp(tm.latency_sigma *
+                                                 rng.standard_normal()))
+    return latency, not dropped
 
 
 @functools.lru_cache(maxsize=64)
@@ -86,12 +136,17 @@ def _step_core(cfg: ModelConfig) -> Callable:
     return step
 
 
-def _epoch_core(cfg: ModelConfig, steps: int, lr: float,
-                warmup: int) -> Callable:
-    """Un-jitted scanned epoch: (params, opt, stacked batches) ->
-    (params, opt, per-step losses).  The lr schedule is evaluated inside
-    the scan from the step counter."""
-    sched = cosine_schedule(lr, steps, warmup=warmup)
+def _epoch_core(cfg: ModelConfig, steps: int, lr: float, warmup: int,
+                total_steps: Optional[int] = None) -> Callable:
+    """Un-jitted scanned epoch: (params, opt, stacked batches[, start])
+    -> (params, opt, per-step losses).  The lr schedule is evaluated
+    inside the scan from the step counter.
+
+    ``total_steps`` sets the schedule horizon when this epoch is one
+    *round* of a longer run (async fleet rounds); ``start`` then offsets
+    the counter, so round ``r`` of ``k`` steps computes exactly steps
+    ``[r*k, (r+1)*k)`` of the equivalent single-scan epoch."""
+    sched = cosine_schedule(lr, total_steps or steps, warmup=warmup)
     step = _step_core(cfg)
 
     def carry_step(carry, b, lr_now):
@@ -100,8 +155,8 @@ def _epoch_core(cfg: ModelConfig, steps: int, lr: float,
 
     scanned = scan_epoch(carry_step, sched, steps)
 
-    def epoch(params, opt, batches):
-        (params, opt), losses = scanned((params, opt), batches)
+    def epoch(params, opt, batches, start=0):
+        (params, opt), losses = scanned((params, opt), batches, start)
         return params, opt, losses
 
     return epoch
@@ -117,8 +172,29 @@ def _device_epoch_fn(cfg: ModelConfig, steps: int, lr: float, warmup: int):
 def _fleet_epoch_fn(cfg: ModelConfig, steps: int, lr: float, warmup: int):
     """The scanned epoch vmapped over a leading device axis — one
     compiled program trains every same-arch device in the bucket."""
-    return jax.jit(jax.vmap(_epoch_core(cfg, steps, lr, warmup)),
-                   donate_argnums=(0, 1))
+    return jax.jit(jax.vmap(
+        lambda p, o, b: _epoch_core(cfg, steps, lr, warmup)(p, o, b)),
+        donate_argnums=(0, 1))
+
+
+@functools.lru_cache(maxsize=64)
+def _fleet_round_fn(cfg: ModelConfig, steps: int, lr: float, warmup: int,
+                    total_steps: int):
+    """One async *round* for a whole arch bucket: the scanned epoch
+    vmapped over devices, with per-device schedule offsets (``start``,
+    each device's local step into the ``total_steps`` horizon) and an
+    ``active`` mask — offline devices' params/opt pass through untouched
+    and their loss lanes come back NaN, so the round compiles ONCE per
+    bucket shape regardless of which subset of devices is online."""
+    epoch = _epoch_core(cfg, steps, lr, warmup, total_steps=total_steps)
+
+    def device_round(params, opt, batches, start, active):
+        p2, o2, losses = epoch(params, opt, batches, start)
+        sel = lambda new, old: jnp.where(active, new, old)
+        return (jax.tree.map(sel, p2, params), jax.tree.map(sel, o2, opt),
+                jnp.where(active, losses, jnp.nan))
+
+    return jax.jit(jax.vmap(device_round), donate_argnums=(0, 1))
 
 
 @functools.lru_cache(maxsize=64)
@@ -178,9 +254,45 @@ def train_device(spec: DeviceSpec, corpus: FederatedCorpus, *, steps: int,
     return _upload(spec, corpus, params, losses)
 
 
+def fleet_buckets(fleet: Sequence[DeviceSpec]
+                  ) -> Dict[ModelConfig, List[DeviceSpec]]:
+    """Group the fleet by (hashable) ``ModelConfig``, preserving order."""
+    buckets: Dict[ModelConfig, List[DeviceSpec]] = {}
+    for spec in fleet:
+        buckets.setdefault(spec.cfg, []).append(spec)
+    return buckets
+
+
+def _stack_trees(trees):
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *trees)
+
+
+def _pad_lanes(tree, n_pad: int):
+    """Append ``n_pad`` copies of lane 0 along the stacked device axis
+    (multi-host runs pad each bucket to a multiple of the host count;
+    padded lanes are discarded after the round)."""
+    if n_pad == 0:
+        return tree
+    return jax.tree.map(
+        lambda x: jnp.concatenate(
+            [x, jnp.broadcast_to(x[:1], (n_pad,) + x.shape[1:])]), tree)
+
+
+def _shard_bucket(mesh, *trees):
+    """Lay a bucket's stacked trees out over the ``("hosts",)`` mesh:
+    the leading device axis shards over hosts (see
+    ``sharding.rules.fleet_specs``), so fleet size scales with hosts —
+    each host holds ``n_devices / n_hosts`` device states."""
+    from repro.sharding import rules
+    return tuple(
+        jax.device_put(t, rules.named(mesh, rules.fleet_specs(t, mesh)))
+        for t in trees)
+
+
 def train_fleet(fleet: Sequence[DeviceSpec], corpus: FederatedCorpus, *,
                 steps: int, batch: int, seq_len: int, lr: float = 3e-3,
-                seed: int = 0, state_policy: str = "") -> List[Dict]:
+                seed: int = 0, state_policy: str = "",
+                n_hosts: int = 1, mesh=None) -> List[Dict]:
     """Arch-bucketed compiled fleet training.
 
     Groups the fleet by ``ModelConfig``, stacks each bucket's init
@@ -193,22 +305,33 @@ def train_fleet(fleet: Sequence[DeviceSpec], corpus: FederatedCorpus, *,
     ('bf16' halves them; 'int8' quarters v) so a host fits measurably
     more devices per bucket at equal bytes — the paper's
     resource-constrained edge fleet at scale.
+
+    ``n_hosts > 1`` (or an explicit ``("hosts",)`` ``mesh``) runs each
+    bucket through ``jax.pjit``: the stacked device axis is sharded over
+    the mesh (buckets pad to a multiple of the host count with discarded
+    lanes), so the per-host resident state — and therefore the fleet
+    size one simulation can hold — scales linearly with hosts.  Lanes
+    are independent, so the sharded run is bit-identical to ``n_hosts=1``.
     """
-    buckets: Dict[ModelConfig, List[DeviceSpec]] = {}
-    for spec in fleet:
-        buckets.setdefault(spec.cfg, []).append(spec)
+    if mesh is None and n_hosts > 1:
+        from repro.launch.mesh import make_fleet_mesh
+        mesh = make_fleet_mesh(n_hosts)
+    n_shards = mesh.shape["hosts"] if mesh is not None else 1
 
     uploads: Dict[int, Dict] = {}
     warmup = max(steps // 20, 1)
-    for cfg, specs in buckets.items():
+    for cfg, specs in fleet_buckets(fleet).items():
         inits = [_device_init(s, seed, state_policy) for s in specs]
-        params = jax.tree.map(lambda *xs: jnp.stack(xs),
-                              *[p for p, _ in inits])
-        opt = jax.tree.map(lambda *xs: jnp.stack(xs), *[o for _, o in inits])
-        batches = jax.tree.map(
-            lambda *xs: jnp.stack(xs),
-            *[corpus.device_batches(s.device_id, steps, batch, seq_len)
-              for s in specs])
+        params = _stack_trees([p for p, _ in inits])
+        opt = _stack_trees([o for _, o in inits])
+        batches = _stack_trees(
+            [corpus.device_batches(s.device_id, steps, batch, seq_len)
+             for s in specs])
+        if mesh is not None:
+            n_pad = (-len(specs)) % n_shards
+            params, opt, batches = (_pad_lanes(t, n_pad)
+                                    for t in (params, opt, batches))
+            params, opt, batches = _shard_bucket(mesh, params, opt, batches)
         epoch = _fleet_epoch_fn(cfg, steps, lr, warmup)
         params, _, losses = epoch(params, opt, batches)
         losses = np.asarray(losses)          # one host sync per bucket

@@ -26,7 +26,113 @@ from repro.data.federated import FederatedCorpus
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.optim import adamw_init, adamw_update, cosine_schedule
-from repro.utils.pytree import tree_size
+from repro.utils.pytree import tree_average, tree_size
+
+
+@dataclasses.dataclass(frozen=True)
+class AsyncFleetConfig:
+    """Participation schedule for async / hierarchical fleet rounds.
+
+    Per round a sampled subset of the fleet reports its local update;
+    the server merges deliverable reports with FedAsync-style
+    staleness-discounted weights ``alpha / (1 + staleness)^
+    staleness_power`` (``staleness_weight``).  Reports later than
+    ``deadline_s`` are handled by ``deadline_policy``:
+
+      * ``"drop"``    — the late update is discarded;
+      * ``"stale"``   — it is carried and merged in a later round with
+                        its accrued staleness discount;
+      * ``"standby"`` — the round over-selects ``over_select`` extra
+                        standby devices so the on-time quorum still
+                        meets the participation target; late reports
+                        are dropped.
+
+    ``hierarchical`` interposes one sub-server per arch bucket: devices
+    report edge-locally and only each bucket's merged aggregate crosses
+    the global link (comm accounting bills the two tiers separately —
+    the merge math is identical to flat mode by construction).
+    """
+    rounds: int = 3
+    steps_per_round: int = 10
+    participation: float = 1.0     # fraction of the fleet sampled per round
+    alpha: float = 0.6             # FedAsync base mixing weight
+    staleness_power: float = 0.5   # a in alpha / (1 + staleness)^a
+    deadline_s: float = float("inf")
+    deadline_policy: str = "stale"  # "drop" | "stale" | "standby"
+    over_select: float = 0.25      # standby headroom (deadline_policy=standby)
+    server_momentum: float = 0.0   # G <- mom*G + (1-mom)*round_average
+    hierarchical: bool = False     # per-arch-bucket sub-servers (edge tier)
+    seed: int = 0
+
+    def validate(self) -> "AsyncFleetConfig":
+        if self.deadline_policy not in ("drop", "stale", "standby"):
+            raise ValueError(
+                f"deadline_policy {self.deadline_policy!r} not in "
+                "('drop', 'stale', 'standby')")
+        if not (0.0 < self.participation <= 1.0):
+            raise ValueError("participation must be in (0, 1]")
+        if self.rounds < 1 or self.steps_per_round < 1:
+            raise ValueError("rounds and steps_per_round must be >= 1")
+        return self
+
+
+def staleness_weight(alpha: float, staleness: float, power: float) -> float:
+    """FedAsync mixing weight for a report ``staleness`` rounds old."""
+    return float(alpha) / (1.0 + float(staleness)) ** float(power)
+
+
+class FleetAggregator:
+    """Staleness-discounted per-arch-bucket merging (FedAsync-style).
+
+    Each round's deliverable reports for a bucket are combined into a
+    weighted average (weights ``staleness_weight(alpha, tau, power)``)
+    and mixed into the bucket's running aggregate under
+    ``server_momentum``.  All-fresh reports get equal weights, which is
+    computed as the *plain* ``tree_average`` — so with full on-time
+    participation one round reproduces the synchronous FedAvg merge
+    bit-for-bit (tests/test_fleet_async.py property tests).
+    """
+
+    def __init__(self, acfg: AsyncFleetConfig):
+        self.acfg = acfg
+        self.aggregates: Dict = {}       # bucket key -> merged params
+        self.merged_staleness: List[int] = []
+
+    def merge_round(self, bucket_key, reports: Sequence[Dict]):
+        """``reports``: [{"device_id", "params", "staleness"}] — merged
+        in device-id order so float accumulation is deterministic."""
+        if not reports:
+            return self.aggregates.get(bucket_key)
+        reports = sorted(reports, key=lambda r: r["device_id"])
+        ws = [staleness_weight(self.acfg.alpha, r["staleness"],
+                               self.acfg.staleness_power) for r in reports]
+        self.merged_staleness.extend(int(r["staleness"]) for r in reports)
+        if len(set(ws)) == 1:
+            # uniform weights ARE the plain average — short-circuiting
+            # keeps the all-fresh round bitwise equal to FedAvg
+            avg = tree_average([r["params"] for r in reports])
+        else:
+            total = sum(ws)
+            wn = [w / total for w in ws]
+            avg = jax.tree.map(
+                lambda *xs: sum(w * x.astype(jnp.float32)
+                                for w, x in zip(wn, xs)).astype(xs[0].dtype),
+                *[r["params"] for r in reports])
+        prev = self.aggregates.get(bucket_key)
+        mom = self.acfg.server_momentum
+        if prev is not None and mom > 0.0:
+            avg = jax.tree.map(
+                lambda g, a: (mom * g.astype(jnp.float32) +
+                              (1.0 - mom) * a.astype(jnp.float32)
+                              ).astype(a.dtype), prev, avg)
+        self.aggregates[bucket_key] = avg
+        return avg
+
+    def staleness_histogram(self) -> Dict[int, int]:
+        hist: Dict[int, int] = {}
+        for t in self.merged_staleness:
+            hist[t] = hist.get(t, 0) + 1
+        return hist
 
 
 @dataclasses.dataclass
@@ -51,6 +157,9 @@ class ServerConfig:
     # 'int8', see repro.optim.adamw.resolve_moment_policy); the compiled
     # epoch retraces per state structure, no key change needed
     state_policy: str = ""
+    # async fleet participation schedule; None keeps the synchronous
+    # one-shot `train_fleet` path (see AsyncFleetConfig)
+    schedule: Optional[AsyncFleetConfig] = None
 
 
 @functools.lru_cache(maxsize=64)

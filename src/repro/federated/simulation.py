@@ -17,7 +17,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.data.federated import FederatedCorpus
-from repro.federated.device import DeviceSpec, train_fleet
+from repro.federated.async_fleet import train_fleet_async
+from repro.federated.device import (STRAGGLER_PROFILES, DeviceSpec,
+                                    TrafficModel, train_fleet)
 from repro.federated.server import DeepFusionServer, ServerConfig
 from repro.models import model as M
 from repro.models.config import ModelConfig
@@ -70,11 +72,32 @@ def evaluate_model(params, cfg: ModelConfig, corpus: FederatedCorpus, *,
 
 def build_fleet(sim: SimulationConfig, corpus: FederatedCorpus,
                 device_cfgs: Sequence[ModelConfig], *,
-                full_cfgs: Optional[Sequence[ModelConfig]] = None
-                ) -> List[DeviceSpec]:
+                full_cfgs: Optional[Sequence[ModelConfig]] = None,
+                traffic=None) -> List[DeviceSpec]:
     """``full_cfgs`` (parallel to ``device_cfgs``): the full-size model
     each family stands in for, so comm-cost accounting bills the paper's
-    device LLMs even when the simulation trains reduced CPU variants."""
+    device LLMs even when the simulation trains reduced CPU variants.
+
+    ``traffic``: a ``TrafficModel`` (or a ``STRAGGLER_PROFILES`` name)
+    applied to every device, for async-round straggler simulation."""
+    if full_cfgs is not None and len(full_cfgs) != len(device_cfgs):
+        # fail here with names, not deep inside the fleet loop with an
+        # opaque IndexError on some sampled arch id
+        missing = [c.name for c in device_cfgs[len(full_cfgs):]] \
+            if len(full_cfgs) < len(device_cfgs) else []
+        raise ValueError(
+            f"full_cfgs has {len(full_cfgs)} entries for "
+            f"{len(device_cfgs)} device families "
+            f"({[c.name for c in device_cfgs]}); it must be parallel to "
+            f"device_cfgs" +
+            (f" — missing full-size models for {missing}" if missing else ""))
+    if isinstance(traffic, str):
+        try:
+            traffic = STRAGGLER_PROFILES[traffic]
+        except KeyError:
+            raise ValueError(
+                f"unknown straggler profile {traffic!r}; pick one of "
+                f"{sorted(STRAGGLER_PROFILES)}") from None
     rng = np.random.default_rng(sim.seed + 42)
     fleet = []
     for n in range(sim.n_devices):
@@ -82,29 +105,57 @@ def build_fleet(sim: SimulationConfig, corpus: FederatedCorpus,
         fleet.append(DeviceSpec(
             device_id=n, cfg=device_cfgs[arch], arch_id=arch,
             domain_id=int(corpus.device_domain[n]),
-            full_cfg=full_cfgs[arch] if full_cfgs else None))
+            full_cfg=full_cfgs[arch] if full_cfgs else None,
+            traffic=traffic))
     return fleet
 
 
 def run_deepfusion(sim: SimulationConfig, server_cfg: ServerConfig,
                    device_cfgs: Sequence[ModelConfig], *,
                    log: Callable[[str], None] = print,
-                   uploads=None, corpus=None, full_cfgs=None):
+                   uploads=None, corpus=None, full_cfgs=None,
+                   traffic=None, n_hosts: int = 1):
     """Returns (moe_params, report) — report carries metrics + comm cost.
 
     ``full_cfgs`` optionally maps each device family to the full-size
-    model it stands in for (comm-cost billing; see build_fleet)."""
+    model it stands in for (comm-cost billing; see build_fleet).
+
+    ``server_cfg.schedule`` (an ``AsyncFleetConfig``) switches local
+    training from the one-shot synchronous ``train_fleet`` to async
+    participation rounds (``train_fleet_async``); ``traffic`` sets every
+    device's straggler model (see ``build_fleet``) and ``n_hosts``
+    shards the stacked fleet state over a ``("hosts",)`` mesh.  The
+    async round log lands in ``report["fleet"]``."""
     corpus = corpus or FederatedCorpus.build(
         seed=sim.seed, n_devices=sim.n_devices, n_domains=sim.n_domains,
         vocab=sim.vocab, alpha=sim.alpha_noniid)
+    fleet_report = None
     if uploads is None:
-        fleet = build_fleet(sim, corpus, device_cfgs, full_cfgs=full_cfgs)
-        # arch-bucketed vmapped fleet training: one compiled program per
-        # model family instead of n_devices sequential loops
-        uploads = train_fleet(fleet, corpus, steps=sim.device_steps,
-                              batch=sim.device_batch, seq_len=sim.seq_len,
-                              seed=sim.seed)
+        fleet = build_fleet(sim, corpus, device_cfgs, full_cfgs=full_cfgs,
+                            traffic=traffic)
+        if server_cfg.schedule is not None:
+            acfg = server_cfg.schedule
+            if acfg.steps_per_round <= 0:
+                # 0 = "derive from the sim": split device_steps evenly
+                acfg = dataclasses.replace(
+                    acfg, steps_per_round=max(1, sim.device_steps
+                                              // acfg.rounds))
+            uploads, fleet_report = train_fleet_async(
+                fleet, corpus, acfg, batch=sim.device_batch,
+                seq_len=sim.seq_len, seed=sim.seed, n_hosts=n_hosts,
+                log=log)
+        else:
+            # arch-bucketed vmapped fleet training: one compiled program
+            # per model family instead of n_devices sequential loops
+            uploads = train_fleet(fleet, corpus, steps=sim.device_steps,
+                                  batch=sim.device_batch,
+                                  seq_len=sim.seq_len, seed=sim.seed,
+                                  n_hosts=n_hosts)
         for spec, up in zip(fleet, uploads):
+            if not up["losses"]:
+                log(f"device {spec.device_id} (arch {spec.arch_id}, "
+                    f"domain {spec.domain_id}): never online")
+                continue
             log(f"device {spec.device_id} (arch {spec.arch_id}, "
                 f"domain {spec.domain_id}): loss "
                 f"{up['losses'][0]:.3f}->{up['losses'][-1]:.3f}")
@@ -115,6 +166,8 @@ def run_deepfusion(sim: SimulationConfig, server_cfg: ServerConfig,
     report["metrics"] = metrics
     report["uploads"] = uploads
     report["corpus"] = corpus
+    if fleet_report is not None:
+        report["fleet"] = fleet_report
     if report.get("distill_hists"):
         finals = ", ".join(f"{h[-1]:.3f}" for h in report["distill_hists"])
         log(f"Phase II final losses per proxy: [{finals}]")

@@ -26,6 +26,24 @@ def make_host_mesh():
     return jax.make_mesh((1, n), ("data", "model"))
 
 
+def make_fleet_mesh(n_hosts=None):
+    """1-D ``("hosts",)`` mesh for multi-host bucketed fleet training.
+
+    Each mesh entry stands for one simulation host; the fleet drivers
+    shard the stacked device axis over it (``sharding.rules.fleet_specs``)
+    so resident fleet state — and therefore fleet size — scales linearly
+    with hosts.  CI exercises it with fake CPU devices
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=4``).
+    """
+    n = len(jax.devices()) if n_hosts is None else n_hosts
+    if n > len(jax.devices()):
+        raise ValueError(
+            f"fleet mesh wants {n} hosts but only {len(jax.devices())} "
+            "devices exist (set XLA_FLAGS="
+            "--xla_force_host_platform_device_count=N for fake hosts)")
+    return jax.make_mesh((n,), ("hosts",))
+
+
 def make_decode_mesh(n_devices=None):
     """(data, model) mesh shaped for serving decode.
 

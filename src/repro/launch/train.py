@@ -6,10 +6,21 @@ the dry-run lowers for the full configs.
 
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --variant reduced --steps 20 --batch 8 --seq 128
+
+Fleet mode (``--fleet N``) instead drives the federated device fleet —
+synchronous one-shot by default, async participation rounds with
+``--async-rounds`` — and is what CI's fleet-smoke job exercises under
+fake hosts:
+
+  XLA_FLAGS=--xla_force_host_platform_device_count=4 \
+  PYTHONPATH=src python -m repro.launch.train --fleet 16 --n-hosts 4 \
+      --async-rounds 3 --steps-per-round 4 --dropout 0.25 \
+      --deadline-policy stale --straggler-profile mild
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import time
 
 import jax
@@ -20,6 +31,7 @@ from repro.configs import get_config
 from repro.data.federated import FederatedCorpus
 from repro.launch.mesh import make_host_mesh, make_production_mesh
 from repro.models import model as M
+from repro.models.config import ModelConfig
 from repro.optim import adamw_init, adamw_update, cosine_schedule
 from repro.sharding import batch_spec, named, opt_state_specs, param_specs
 from repro.checkpoint import save_pytree
@@ -36,9 +48,102 @@ def make_batch(cfg, corpus, step, batch, seq):
     return b
 
 
+# tiny stand-ins for two device families, sized so the fleet smoke runs
+# in seconds on CPU (the real families live in benchmarks/common.py —
+# src never imports from benchmarks)
+_FLEET_TINY = dict(vocab_size=256, dtype="float32", remat=False,
+                   attn_chunk_q=16, attn_chunk_k=16, loss_chunk=16)
+
+
+def _fleet_families():
+    return [
+        ModelConfig(name="fleet-gpt2-tiny", n_layers=2, d_model=32,
+                    n_heads=2, n_kv_heads=2, head_dim=16, d_ff=64,
+                    norm_type="layernorm", act="gelu", mlp_gated=False,
+                    pos_embedding="sinusoidal", **_FLEET_TINY).validate(),
+        ModelConfig(name="fleet-llama-tiny", n_layers=2, d_model=48,
+                    n_heads=2, n_kv_heads=2, head_dim=24, d_ff=96,
+                    **_FLEET_TINY).validate(),
+    ]
+
+
+def _uploads_bitwise_equal(ua, ub) -> bool:
+    for a, b in zip(ua, ub):
+        if a["losses"] != b["losses"]:
+            return False
+        for xa, xb in zip(jax.tree.leaves(a["params"]),
+                          jax.tree.leaves(b["params"])):
+            if not bool(jnp.all(xa == xb)):
+                return False
+    return True
+
+
+def run_fleet(args) -> int:
+    from repro.federated import (STRAGGLER_PROFILES, AsyncFleetConfig,
+                                 SimulationConfig, build_fleet, train_fleet,
+                                 train_fleet_async)
+
+    sim = SimulationConfig(n_devices=args.fleet, n_domains=4, vocab=256,
+                           seq_len=args.seq, device_steps=args.steps,
+                           device_batch=args.batch, seed=0)
+    corpus = FederatedCorpus.build(seed=sim.seed, n_devices=sim.n_devices,
+                                   n_domains=sim.n_domains, vocab=sim.vocab,
+                                   alpha=sim.alpha_noniid)
+    traffic = STRAGGLER_PROFILES[args.straggler_profile]
+    if args.dropout is not None:
+        traffic = dataclasses.replace(traffic, dropout_p=args.dropout)
+    fleet = build_fleet(sim, corpus, _fleet_families(), traffic=traffic)
+
+    if args.async_rounds <= 0:
+        t0 = time.time()
+        uploads = train_fleet(fleet, corpus, steps=args.steps,
+                              batch=args.batch, seq_len=args.seq,
+                              n_hosts=args.n_hosts)
+        print(f"sync fleet: {len(uploads)} uploads in {time.time()-t0:.1f}s, "
+              f"final losses {[round(u['losses'][-1], 3) for u in uploads[:4]]}…")
+        return 0
+
+    acfg = AsyncFleetConfig(
+        rounds=args.async_rounds, steps_per_round=args.steps_per_round,
+        participation=args.participation, deadline_s=args.deadline_s,
+        deadline_policy=args.deadline_policy,
+        hierarchical=args.hierarchical)
+    t0 = time.time()
+    uploads, rep = train_fleet_async(
+        fleet, corpus, acfg, batch=args.batch, seq_len=args.seq,
+        n_hosts=args.n_hosts, log=print)
+    dt = time.time() - t0
+    print(f"async fleet ({rep['mode']}): {acfg.rounds} rounds in {dt:.1f}s "
+          f"({acfg.rounds / dt:.2f} rounds/s), participation "
+          f"{rep['participation_rate']:.2f}, staleness p95 "
+          f"{rep['staleness_p95']:.1f}, global comm "
+          f"{rep['comm_bytes_global']} B (edge {rep['comm_bytes_edge']} B), "
+          f"lost {rep['lost_reports']}")
+
+    if args.check_sync:
+        # only meaningful on an ideal fleet: every device online + on
+        # time, full participation — then async rounds must reproduce the
+        # one-shot synchronous run bit-for-bit
+        total = acfg.rounds * acfg.steps_per_round
+        ideal = build_fleet(sim, corpus, _fleet_families())
+        sync = train_fleet(ideal, corpus, steps=total, batch=args.batch,
+                           seq_len=args.seq, n_hosts=args.n_hosts)
+        ideal_cfg = dataclasses.replace(acfg, participation=1.0,
+                                        deadline_s=float("inf"))
+        asy, _ = train_fleet_async(ideal, corpus, ideal_cfg,
+                                   batch=args.batch, seq_len=args.seq,
+                                   n_hosts=args.n_hosts)
+        if not _uploads_bitwise_equal(asy, sync):
+            print("CHECK-SYNC FAILED: async rounds != synchronous train_fleet")
+            return 1
+        print(f"check-sync OK: {acfg.rounds}x{acfg.steps_per_round} async "
+              f"rounds == {total}-step train_fleet bit-for-bit")
+    return 0
+
+
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
+    ap.add_argument("--arch")
     ap.add_argument("--variant", default="reduced",
                     choices=["full", "reduced"])
     ap.add_argument("--steps", type=int, default=50)
@@ -48,7 +153,31 @@ def main():
     ap.add_argument("--vocab", type=int, default=512)
     ap.add_argument("--production-mesh", action="store_true")
     ap.add_argument("--save", default="")
+    # fleet mode (see module docstring)
+    ap.add_argument("--fleet", type=int, default=0,
+                    help="train an N-device federated fleet instead of one model")
+    ap.add_argument("--n-hosts", type=int, default=1)
+    ap.add_argument("--async-rounds", type=int, default=0,
+                    help="> 0 switches the fleet to async participation rounds")
+    ap.add_argument("--steps-per-round", type=int, default=4)
+    ap.add_argument("--participation", type=float, default=1.0)
+    ap.add_argument("--dropout", type=float, default=None,
+                    help="per-round dropout probability (overrides profile)")
+    ap.add_argument("--deadline-s", type=float, default=float("inf"))
+    ap.add_argument("--deadline-policy", default="stale",
+                    choices=["drop", "stale", "standby"])
+    ap.add_argument("--straggler-profile", default="none",
+                    choices=["none", "mild", "harsh"])
+    ap.add_argument("--hierarchical", action="store_true")
+    ap.add_argument("--check-sync", action="store_true",
+                    help="assert async rounds on an ideal fleet reproduce "
+                         "synchronous train_fleet bit-for-bit")
     args = ap.parse_args()
+
+    if args.fleet > 0:
+        raise SystemExit(run_fleet(args))
+    if not args.arch:
+        ap.error("--arch is required (unless running --fleet mode)")
 
     cfg = get_config(args.arch, variant=args.variant)
     if args.variant == "reduced":

@@ -16,14 +16,21 @@ import jax.numpy as jnp
 
 def scan_epoch(step: Callable, schedule: Callable, steps: int) -> Callable:
     """``step: (carry, batch, lr) -> (carry, loss)`` -> scanned
-    ``epoch: (carry, batches) -> (carry, losses)`` over stacked batches
-    with the schedule applied to the step counter."""
+    ``epoch: (carry, batches, start=0) -> (carry, losses)`` over stacked
+    batches with the schedule applied to the step counter.
 
-    def epoch(carry, batches):
+    ``start`` offsets the counter, so an epoch can be one *round* of a
+    longer schedule (the async fleet driver passes each device's local
+    step, a traced per-lane scalar under ``vmap``) — ``start=0`` is the
+    standalone-epoch case and reproduces the historical behaviour
+    bit-for-bit."""
+
+    def epoch(carry, batches, start=0):
         def body(carry, inp):
             b, s = inp
             return step(carry, b, schedule(s))
 
-        return jax.lax.scan(body, carry, (batches, jnp.arange(steps)))
+        return jax.lax.scan(body, carry,
+                            (batches, start + jnp.arange(steps)))
 
     return epoch

@@ -4,9 +4,12 @@ from repro.sharding.rules import (
     opt_state_specs,
     batch_spec,
     cache_specs,
+    fleet_specs,
+    host_resident_bytes,
     named,
     data_axes_of,
 )
 
 __all__ = ["abstract_mesh", "param_specs", "opt_state_specs", "batch_spec",
-           "cache_specs", "named", "data_axes_of"]
+           "cache_specs", "fleet_specs", "host_resident_bytes", "named",
+           "data_axes_of"]

@@ -146,6 +146,41 @@ def opt_state_specs(params, mesh: Mesh, *, fsdp: bool = True,
     return specs
 
 
+def fleet_specs(tree, mesh: Mesh):
+    """Stacked-fleet layout over a ``("hosts",)`` mesh.
+
+    The fleet drivers stack per-device params / optimizer state / batch
+    streams along a leading device axis (``federated.device.train_fleet``);
+    that axis shards over "hosts" when divisible — each host owns a
+    contiguous run of simulated devices — and everything else (per-lane
+    scalars that stacked into non-divisible vectors, e.g. a padded
+    remainder) replicates.  Non-divisible dims replicate, never error.
+    """
+    n = mesh.shape["hosts"]
+
+    def spec(leaf):
+        nd = getattr(leaf, "ndim", 0)
+        if nd >= 1 and n > 1 and leaf.shape[0] % n == 0:
+            return P(*(["hosts"] + [None] * (nd - 1)))
+        return P(*([None] * nd))
+
+    return jax.tree.map(spec, tree)
+
+
+def host_resident_bytes(tree, device_index: int = 0) -> int:
+    """Bytes of ``tree`` resident on ONE device of the fleet mesh.
+
+    For a ``fleet_specs``-sharded state this is ``total / n_hosts`` plus
+    any replicated leaves — the per-host footprint that bounds how many
+    simulated devices a host can keep resident between rounds."""
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        for sh in leaf.addressable_shards:
+            if sh.device.id == device_index:
+                total += int(sh.data.size) * sh.data.dtype.itemsize
+    return total
+
+
 def batch_spec(batch, mesh: Mesh):
     """Shard every batch array's leading (batch) dim over the data axes."""
     daxes = data_axes_of(mesh)

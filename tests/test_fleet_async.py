@@ -1,0 +1,383 @@
+"""Async / hierarchical fleet rounds: equivalence, robustness, scale-out.
+
+The async driver's design invariants, each pinned here:
+ * an ideal fleet (everyone online + on time, full participation) run in
+   async rounds is BIT-FOR-BIT the synchronous one-shot ``train_fleet``
+ * staleness-weighted merging with all-fresh reports IS the plain
+   FedAvg ``tree_average`` (exact), and mixed-staleness weights match
+   the closed-form FedAsync formula
+ * traffic draws are pure functions of (seed, device, round): replays
+   are bit-identical, and a dropped device rejoins exactly where its
+   batch stream paused
+ * deadline policies (drop / stale / standby) route late reports as
+   documented; hierarchical mode merges identically to flat mode while
+   billing the global link only per-bucket
+ * multi-host sharding over a ("hosts",) mesh keeps lanes independent
+   (async == sync still bitwise at equal host count; 1-host vs 4-host
+   only differs by shape-dependent XLA fusion, <= 1 ulp)
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data.federated import FederatedCorpus
+from repro.federated.async_fleet import train_fleet_async
+from repro.federated.device import (DeviceSpec, TrafficModel, _device_step_fn,
+                                    sample_traffic, train_fleet)
+from repro.federated.server import (AsyncFleetConfig, FleetAggregator,
+                                    staleness_weight)
+from repro.federated.simulation import SimulationConfig, build_fleet
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init, cosine_schedule
+from repro.utils.pytree import tree_average
+
+V = 64
+SMALL = dict(vocab_size=V, dtype="float32", remat=False,
+             attn_chunk_q=16, attn_chunk_k=16, loss_chunk=16)
+CFG_A = ModelConfig(name="async-a-tiny", n_layers=1, d_model=32, n_heads=2,
+                    n_kv_heads=2, head_dim=16, d_ff=64,
+                    norm_type="layernorm", act="gelu", mlp_gated=False,
+                    pos_embedding="sinusoidal", **SMALL).validate()
+CFG_B = ModelConfig(name="async-b-tiny", n_layers=2, d_model=48, n_heads=2,
+                    n_kv_heads=2, head_dim=24, d_ff=96, **SMALL).validate()
+
+BATCH, SEQ = 4, 16
+KW = dict(batch=BATCH, seq_len=SEQ)
+
+MULTI = len(jax.devices()) >= 4
+needs_multi = pytest.mark.skipif(
+    not MULTI, reason="needs >= 4 devices "
+    "(XLA_FLAGS=--xla_force_host_platform_device_count=4)")
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return FederatedCorpus.build(seed=0, n_devices=8, n_domains=2, vocab=V)
+
+
+def fleet_of(n, traffic=None):
+    return [DeviceSpec(i, CFG_A if i % 2 else CFG_B, i % 2, i % 2,
+                       traffic=traffic) for i in range(n)]
+
+
+def _tree_eq(a, b):
+    return all(bool(jnp.all(x == y)) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def _uploads_bitwise(ua, ub):
+    return all(a["losses"] == b["losses"] and
+               _tree_eq(a["params"], b["params"])
+               for a, b in zip(ua, ub))
+
+
+def _tree_max_diff(a, b):
+    return max(float(jnp.max(jnp.abs(x - y))) for x, y in
+               zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+# ---------------------------------------------------------------------------
+# ideal async rounds == synchronous one-shot
+# ---------------------------------------------------------------------------
+
+def test_ideal_async_equals_sync_bitwise(corpus):
+    fleet = fleet_of(5)
+    acfg = AsyncFleetConfig(rounds=3, steps_per_round=2)
+    asy, rep = train_fleet_async(fleet, corpus, acfg, **KW)
+    sync = train_fleet(fleet, corpus, steps=6, **KW)
+    assert _uploads_bitwise(asy, sync)
+    assert rep["participation_rate"] == 1.0
+    assert rep["staleness_hist"] == {0: 15}    # 5 devices x 3 rounds
+    assert rep["lost_reports"] == 0
+
+
+def test_round_slicing_matches_batch_stream(corpus):
+    # the rejoin guarantee reduces to this: the round-sliced stream is a
+    # slice of the full stream, per (device, step), independent of when
+    # the slices are generated
+    full = corpus.device_batches(1, 6, BATCH, SEQ)
+    tail = corpus.device_batches(1, 3, BATCH, SEQ, start=3)
+    sliced = jax.tree.map(lambda x: x[3:], full)
+    assert _tree_eq(sliced, tail)
+
+
+def test_dropped_device_rejoins_where_it_paused(corpus):
+    # one device, online only on even rounds (availability window):
+    # after 4 rounds of 2 steps it has trained local steps 0..3 of an
+    # 8-step schedule horizon.  The per-step reference loop over the
+    # SAME stream must match bit-for-bit — i.e. the schedule and batch
+    # stream advance with the device's local step, not the round index.
+    tm = TrafficModel(avail_period=2, avail_duty=1)
+    spec = DeviceSpec(0, CFG_A, 0, 0, traffic=tm)
+    acfg = AsyncFleetConfig(rounds=4, steps_per_round=2)
+    ups, rep = train_fleet_async([spec], corpus, acfg, **KW)
+    assert len(ups[0]["losses"]) == 4          # trained rounds 0 and 2
+
+    from repro.federated.device import _device_init
+    params, opt = _device_init(spec, 0, "")
+    sched = cosine_schedule(3e-3, 8, warmup=max(8 // 20, 1))
+    step_fn = _device_step_fn(CFG_A)
+    batches = corpus.device_batches(0, 4, BATCH, SEQ)
+    for s in range(4):
+        b = jax.tree.map(lambda x: x[s], batches)
+        params, opt, _ = step_fn(params, opt, b, sched(s))
+    # vmapped-scan vs per-step jit compile differently, so ulp tolerance
+    assert _tree_max_diff(ups[0]["params"], params) < 1e-6
+
+
+def test_traffic_replay_deterministic(corpus):
+    tm = TrafficModel(dropout_p=0.4, median_latency_s=2.0, latency_sigma=1.0)
+    fleet = fleet_of(6, traffic=tm)
+    acfg = AsyncFleetConfig(rounds=3, steps_per_round=2, participation=0.7,
+                            deadline_s=1.5, seed=3)
+    u1, r1 = train_fleet_async(fleet, corpus, acfg, **KW)
+    u2, r2 = train_fleet_async(fleet, corpus, acfg, **KW)
+    assert _uploads_bitwise(u1, u2)
+    assert r1["rounds"] == r2["rounds"]
+    # and the draws really are per-(seed, device, round)
+    for r in range(3):
+        for s in fleet:
+            assert sample_traffic(s, r, 3) == sample_traffic(s, r, 3)
+    assert any(sample_traffic(fleet[0], r, 3) !=
+               sample_traffic(fleet[0], r, 4) for r in range(8))
+
+
+# ---------------------------------------------------------------------------
+# staleness-weighted merging
+# ---------------------------------------------------------------------------
+
+def _report(i, key, staleness):
+    return {"device_id": i, "staleness": staleness,
+            "params": {"w": jax.random.normal(jax.random.PRNGKey(key),
+                                              (4, 3))}}
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_all_fresh_merge_is_exact_fedavg(seed):
+    reports = [_report(i, seed * 10 + i, 0) for i in range(4)]
+    agg = FleetAggregator(AsyncFleetConfig())
+    merged = agg.merge_round("b", reports)
+    avg = tree_average([r["params"] for r in reports])
+    assert _tree_eq(merged, avg)
+
+
+@pytest.mark.parametrize("seed", [0, 1])
+def test_mixed_staleness_matches_closed_form(seed):
+    acfg = AsyncFleetConfig(alpha=0.6, staleness_power=0.5)
+    staleness = [0, 2, 1]
+    reports = [_report(i, seed * 10 + i, t)
+               for i, t in enumerate(staleness)]
+    agg = FleetAggregator(acfg)
+    merged = agg.merge_round("b", reports)
+    ws = np.array([staleness_weight(0.6, t, 0.5) for t in staleness])
+    ws = ws / ws.sum()
+    ref = sum(w * np.asarray(r["params"]["w"], np.float32)
+              for w, r in zip(ws, reports))
+    np.testing.assert_allclose(np.asarray(merged["w"]), ref, rtol=1e-5,
+                               atol=1e-7)
+    # fresher reports weigh more
+    assert staleness_weight(0.6, 0, 0.5) > staleness_weight(0.6, 1, 0.5) \
+        > staleness_weight(0.6, 2, 0.5)
+
+
+def test_server_momentum_mixes_previous_aggregate():
+    acfg = AsyncFleetConfig(server_momentum=0.5)
+    agg = FleetAggregator(acfg)
+    a = agg.merge_round("b", [_report(0, 0, 0)])
+    b_new = _report(1, 1, 0)
+    mixed = agg.merge_round("b", [b_new])
+    ref = 0.5 * np.asarray(a["w"]) + 0.5 * np.asarray(b_new["params"]["w"])
+    np.testing.assert_allclose(np.asarray(mixed["w"]), ref, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# deadline policies
+# ---------------------------------------------------------------------------
+
+def _slow_fleet(n):
+    # deterministic latency (sigma=0): always 3s against a 2s deadline,
+    # i.e. every report is exactly one round late
+    return fleet_of(n, traffic=TrafficModel(median_latency_s=3.0,
+                                            latency_sigma=0.0))
+
+
+def test_deadline_stale_carries_reports_one_round(corpus):
+    acfg = AsyncFleetConfig(rounds=3, steps_per_round=2, deadline_s=2.0,
+                            deadline_policy="stale")
+    _, rep = train_fleet_async(_slow_fleet(4), corpus, acfg, **KW)
+    rounds = rep["rounds"]
+    assert rounds[0]["reported"] == 0
+    assert rounds[1]["stale_merged"] == 4 and rounds[2]["stale_merged"] == 4
+    assert rep["staleness_hist"] == {1: 8}
+    assert rep["staleness_p95"] == 1.0
+    # the final round's reports never matured inside the horizon
+    assert rep["lost_reports"] == 4
+
+
+def test_deadline_drop_discards_late_reports(corpus):
+    acfg = AsyncFleetConfig(rounds=3, steps_per_round=2, deadline_s=2.0,
+                            deadline_policy="drop")
+    _, rep = train_fleet_async(_slow_fleet(4), corpus, acfg, **KW)
+    assert rep["merged_reports"] == 0
+    assert rep["lost_reports"] == 12
+    assert all(r["late_dropped"] == 4 for r in rep["rounds"])
+    assert rep["comm_bytes_global"] == 0
+
+
+def test_deadline_standby_over_selects(corpus):
+    acfg = AsyncFleetConfig(rounds=2, steps_per_round=2, participation=0.5,
+                            deadline_policy="standby", over_select=0.25)
+    _, rep = train_fleet_async(fleet_of(8), corpus, acfg, **KW)
+    # target ceil(0.5 * 8) = 4, over-selected to ceil(4 * 1.25) = 5
+    assert all(r["selected"] == 5 for r in rep["rounds"])
+    ref = AsyncFleetConfig(rounds=2, steps_per_round=2, participation=0.5)
+    _, rep2 = train_fleet_async(fleet_of(8), corpus, ref, **KW)
+    assert all(r["selected"] == 4 for r in rep2["rounds"])
+
+
+def test_bad_policy_rejected():
+    with pytest.raises(ValueError, match="deadline_policy"):
+        AsyncFleetConfig(deadline_policy="wait-forever").validate()
+    with pytest.raises(ValueError, match="participation"):
+        AsyncFleetConfig(participation=0.0).validate()
+
+
+# ---------------------------------------------------------------------------
+# hierarchical aggregation + comm accounting
+# ---------------------------------------------------------------------------
+
+def test_hierarchical_merges_like_flat_and_bills_less(corpus):
+    fleet = fleet_of(6)
+    flat_cfg = AsyncFleetConfig(rounds=2, steps_per_round=2)
+    hier_cfg = dataclasses.replace(flat_cfg, hierarchical=True)
+    _, flat = train_fleet_async(fleet, corpus, flat_cfg, **KW)
+    _, hier = train_fleet_async(fleet, corpus, hier_cfg, **KW)
+    # sub-servers compute the same per-bucket merge, only routing differs
+    assert set(flat["aggregates"]) == set(hier["aggregates"])
+    for k in flat["aggregates"]:
+        assert _tree_eq(flat["aggregates"][k], hier["aggregates"][k])
+    # flat: every device report crosses the global link; hierarchical:
+    # one bucket aggregate per (bucket, round) does
+    assert flat["comm_bytes_edge"] == 0
+    assert hier["comm_bytes_edge"] == flat["comm_bytes_global"]
+    assert 0 < hier["comm_bytes_global"] < flat["comm_bytes_global"]
+
+
+def test_report_carries_participation_columns(corpus):
+    acfg = AsyncFleetConfig(rounds=2, steps_per_round=2, participation=0.6)
+    _, rep = train_fleet_async(fleet_of(5), corpus, acfg, **KW)
+    for key in ("mode", "rounds", "participation_rate", "staleness_hist",
+                "staleness_p95", "comm_bytes_global", "comm_bytes_edge",
+                "lost_reports", "n_hosts"):
+        assert key in rep
+    for row in rep["rounds"]:
+        for key in ("round", "online", "selected", "reported",
+                    "stale_merged", "late_dropped", "participation_rate",
+                    "comm_bytes"):
+            assert key in row
+    # partial participation really holds reports back
+    assert all(r["selected"] == 3 for r in rep["rounds"])
+    assert rep["participation_rate"] <= 0.6
+
+
+# ---------------------------------------------------------------------------
+# build_fleet plumbing
+# ---------------------------------------------------------------------------
+
+def test_build_fleet_validates_full_cfgs(corpus):
+    sim = SimulationConfig(n_devices=4, vocab=V, seq_len=SEQ)
+    with pytest.raises(ValueError, match="async-b-tiny"):
+        build_fleet(sim, corpus, [CFG_A, CFG_B], full_cfgs=[CFG_A])
+    with pytest.raises(ValueError, match="parallel"):
+        build_fleet(sim, corpus, [CFG_A], full_cfgs=[CFG_A, CFG_B])
+    with pytest.raises(ValueError, match="straggler profile"):
+        build_fleet(sim, corpus, [CFG_A], traffic="bogus")
+
+
+def test_build_fleet_applies_traffic_profile(corpus):
+    sim = SimulationConfig(n_devices=4, vocab=V, seq_len=SEQ)
+    fleet = build_fleet(sim, corpus, [CFG_A, CFG_B], traffic="harsh")
+    assert all(s.traffic is not None and s.traffic.dropout_p == 0.3
+               for s in fleet)
+
+
+# ---------------------------------------------------------------------------
+# multi-host bucketed training
+# ---------------------------------------------------------------------------
+
+@needs_multi
+def test_multihost_async_equals_sync_bitwise(corpus):
+    fleet = fleet_of(6)
+    acfg = AsyncFleetConfig(rounds=2, steps_per_round=2)
+    asy, rep = train_fleet_async(fleet, corpus, acfg, n_hosts=4, **KW)
+    sync = train_fleet(fleet, corpus, steps=4, n_hosts=4, **KW)
+    assert _uploads_bitwise(asy, sync)
+    assert rep["n_hosts"] == 4
+
+
+@needs_multi
+def test_multihost_matches_single_host_to_ulp(corpus):
+    # lanes are independent, but padding the stacked device axis changes
+    # array shapes and with them XLA fusion choices — so cross-host-count
+    # equality is to float32-ulp tolerance, not bitwise
+    fleet = fleet_of(6)
+    u1 = train_fleet(fleet, corpus, steps=4, **KW)
+    u4 = train_fleet(fleet, corpus, steps=4, n_hosts=4, **KW)
+    for a, b in zip(u1, u4):
+        assert _tree_max_diff(a["params"], b["params"]) < 1e-6
+
+
+@needs_multi
+def test_fleet_state_shards_over_hosts(corpus):
+    from repro.federated.device import (_device_init, _pad_lanes,
+                                        _shard_bucket, _stack_trees)
+    from repro.launch.mesh import make_fleet_mesh
+    from repro.sharding import host_resident_bytes
+
+    inits = [_device_init(s, 0, "") for s in fleet_of(6) if s.cfg == CFG_A]
+    params = _stack_trees([p for p, _ in inits])
+    b1 = host_resident_bytes(params)
+    mesh = make_fleet_mesh(4)
+    n_pad = (-3) % 4
+    (sharded,) = _shard_bucket(mesh, _pad_lanes(params, n_pad))
+    b4 = host_resident_bytes(sharded)
+    # 3 lanes pad to 4, shard 1 per host: 1/3 of the unsharded bytes
+    assert b1 / b4 >= 1.8
+
+
+def test_make_fleet_mesh_rejects_oversubscription():
+    from repro.launch.mesh import make_fleet_mesh
+    with pytest.raises(ValueError, match="xla_force_host_platform"):
+        make_fleet_mesh(len(jax.devices()) + 1)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end through the simulation driver
+# ---------------------------------------------------------------------------
+
+def test_run_deepfusion_async_smoke(corpus):
+    from repro.federated.server import ServerConfig
+    from repro.federated.simulation import run_deepfusion
+
+    moe_cfg = ModelConfig(name="async-moe-tiny", arch_type="moe", n_layers=1,
+                          d_model=32, n_heads=2, n_kv_heads=2, head_dim=16,
+                          d_ff=64, n_experts=2, top_k=1, moe_d_ff=64,
+                          **SMALL).validate()
+    sim = SimulationConfig(n_devices=4, n_domains=2, vocab=V, seq_len=SEQ,
+                           device_steps=4, device_batch=BATCH, seed=0)
+    scfg = ServerConfig(moe_cfg=moe_cfg, distill_steps=4, distill_batch=4,
+                        tune_steps=4, tune_batch=4, seq_len=SEQ, n_stages=1,
+                        p_q=16, vaa_dim=32,
+                        schedule=AsyncFleetConfig(rounds=2,
+                                                  steps_per_round=0))
+    _, report = run_deepfusion(sim, scfg, [CFG_A, CFG_B],
+                               log=lambda s: None, traffic="mild")
+    fr = report["fleet"]
+    assert fr["participation_rate"] > 0
+    assert len(fr["rounds"]) == 2
+    # steps_per_round=0 derives from the sim: 4 steps over 2 rounds
+    assert sum(len(u["losses"]) for u in report["uploads"]) <= 4 * 2 * 2
+    assert np.isfinite(report["metrics"]["log_ppl"])
